@@ -1,0 +1,52 @@
+"""Shared benchmark setup: calibrated cost models + canonical workloads."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+from repro.configs import get_config
+from repro.core.costmodel import (GB, PF_HIGH, PF_LOW, CostModel,
+                                  HardwareProfile, ModelProfile)
+from repro.core.placement import PlacementOptimizer
+from repro.serving.simulator import SimConfig, poisson_workload
+
+# paper database: 32 partitions x 8 GB (TriviaQA embeddings)
+NUM_PARTITIONS = 32
+PARTITION_BYTES = 8 * GB
+
+# shortened intervals keep the full suite tractable on one CPU core;
+# --full restores the paper's 20-minute intervals
+FAST_INTERVAL_S = 300.0
+PAPER_INTERVAL_S = 1200.0
+RATES = (4, 8, 12, 16)
+
+
+def cost_model(model: str = "llama3-70b",
+               hw: HardwareProfile = PF_HIGH, **kw) -> CostModel:
+    mp = ModelProfile.from_config(get_config(model))
+    return CostModel(hw, mp, partition_bytes=PARTITION_BYTES,
+                     num_partitions=NUM_PARTITIONS, **kw)
+
+
+def optimizer_factory(cm: CostModel) -> Callable[[], PlacementOptimizer]:
+    return lambda: PlacementOptimizer(cm, avg_ctx_len=512, avg_out_len=32)
+
+
+def workload(full: bool = False, seed: int = 0) -> List[float]:
+    return poisson_workload(
+        rates_per_min=RATES,
+        interval_s=PAPER_INTERVAL_S if full else FAST_INTERVAL_S, seed=seed)
+
+
+def timed(fn) -> Tuple[object, float]:
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+Row = Tuple[str, float, str]
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

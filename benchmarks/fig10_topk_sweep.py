@@ -1,0 +1,33 @@
+"""Figure 10: average latency vs retrieval top-k (input length grows with
+k). Paper: 8B stays flat (480->529s for k=1->10); 70B grows as generation
+dominates but RAGDoll keeps a 1.8x edge."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import cost_model, optimizer_factory, timed, workload
+from repro.serving.baselines import make_simulator
+from repro.serving.request import latency_table
+from repro.serving.simulator import SimConfig
+
+TOPK_TO_LEN = {1: 128, 5: 512, 10: 1024}
+
+
+def run(full: bool = False):
+    rows = []
+    arr = workload(full)
+    for model in ("llama3-8b", "llama3-70b"):
+        cm = cost_model(model)
+        for k, in_len in TOPK_TO_LEN.items():
+            lat = {}
+            for mode in ("ragdoll", "serial_vllm"):
+                sim = make_simulator(cm, optimizer_factory(cm)(), mode,
+                                     base=SimConfig(in_len=in_len))
+                res, us = timed(lambda: sim.run(list(arr)))
+                lat[mode] = latency_table(res.requests)["avg_latency"]
+            rows.append((
+                f"fig10/{model}/top{k}", us / max(len(arr), 1),
+                f"ragdoll={lat['ragdoll']:.0f}s "
+                f"vllm={lat['serial_vllm']:.0f}s "
+                f"speedup={lat['serial_vllm'] / lat['ragdoll']:.2f}x"))
+    return rows

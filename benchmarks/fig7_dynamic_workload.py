@@ -1,0 +1,41 @@
+"""Figure 7: per-request end-to-end latency under the dynamic workload
+(arrival rate 4 -> 8 -> 12 -> 16 req/min). Reports the latency trend per
+workload quartile + headline speedups (paper: 1.9x-3.6x vs vLLMRAG)."""
+from __future__ import annotations
+
+from benchmarks.common import (PF_HIGH, PF_LOW, cost_model,
+                               optimizer_factory, timed, workload)
+from repro.serving.baselines import run_suite
+from repro.serving.request import latency_table
+
+
+def _quartiles(reqs):
+    n = len(reqs)
+    out = []
+    for q in range(4):
+        part = reqs[q * n // 4:(q + 1) * n // 4]
+        out.append(sum(r.latency for r in part) / max(len(part), 1))
+    return out
+
+
+def run(full: bool = False):
+    rows = []
+    for model, hw in (("llama3-8b", PF_HIGH), ("llama3-70b", PF_HIGH),
+                      ("llama3-8b", PF_LOW), ("llama3-70b", PF_LOW)):
+        cm = cost_model(model, hw)
+        arr = workload(full)
+        res, us = timed(lambda: run_suite(
+            cm, optimizer_factory(cm), arr,
+            modes=("ragdoll", "serial_vllm", "serial_acc")))
+        lat = {m: latency_table(r.requests)["avg_latency"]
+               for m, r in res.items()}
+        qr = _quartiles(sorted(res["ragdoll"].requests,
+                               key=lambda r: r.arrival))
+        rows.append((
+            f"fig7/{model}/{hw.name}", us / max(len(arr), 1),
+            f"speedup_vs_vllm={lat['serial_vllm'] / lat['ragdoll']:.2f}x "
+            f"speedup_vs_acc={lat['serial_acc'] / lat['ragdoll']:.2f}x "
+            f"rate_quartile_lat={'/'.join(f'{q:.0f}' for q in qr)}s "
+            f"gpu_idle={res['ragdoll'].gpu_idle_frac:.2f}"
+            f"(serial {res['serial_vllm'].gpu_idle_frac:.2f})"))
+    return rows

@@ -1,0 +1,30 @@
+"""Figure 8: latency distribution boxplots -> p50/p90/p99/max per system.
+
+Paper: RAGDoll cuts max latency ~50% vs vLLMRAG, ~80% vs AccRAG (70B)."""
+from __future__ import annotations
+
+from benchmarks.common import cost_model, optimizer_factory, timed, workload
+from repro.serving.baselines import run_suite
+from repro.serving.request import latency_table
+
+
+def run(full: bool = False):
+    rows = []
+    arr = workload(full)
+    for model in ("llama3-8b", "llama3-70b"):
+        cm = cost_model(model)
+        res, us = timed(lambda: run_suite(
+            cm, optimizer_factory(cm), arr,
+            modes=("ragdoll", "serial_vllm", "serial_acc")))
+        tabs = {m: latency_table(r.requests) for m, r in res.items()}
+        mx = {m: t["max"] for m, t in tabs.items()}
+        for mode, t in tabs.items():
+            rows.append((
+                f"fig8/{model}/{mode}", us / max(t["n"], 1) / 3,
+                f"p50={t['p50']:.0f} p90={t['p90']:.0f} "
+                f"p99={t['p99']:.0f} max={t['max']:.0f}"))
+        rows.append((
+            f"fig8/{model}/max_reduction", 0.0,
+            f"vs_vllm={1 - mx['ragdoll'] / mx['serial_vllm']:.0%} "
+            f"vs_acc={1 - mx['ragdoll'] / mx['serial_acc']:.0%}"))
+    return rows

@@ -1,0 +1,36 @@
+"""Figure 9: runtime policy adaptation (70B, PF-High): generation batch
+size grows with backlog while KV-on-GPU fraction and resident partitions
+shrink — the coordinated shifts of the joint placement."""
+from __future__ import annotations
+
+from benchmarks.common import cost_model, optimizer_factory, timed, workload
+from repro.serving.baselines import make_simulator
+
+
+def run(full: bool = False):
+    cm = cost_model("llama3-70b")
+    sim = make_simulator(cm, optimizer_factory(cm)(), "ragdoll")
+    arr = workload(full)
+    res, us = timed(lambda: sim.run(arr))
+    tr = res.policy_trace
+    rows = []
+    n = len(tr)
+    for q in range(4):
+        part = tr[q * n // 4:(q + 1) * n // 4]
+        if not part:
+            continue
+        avg = lambda k: sum(p[k] for p in part) / len(part)
+        rows.append((
+            f"fig9/quartile{q + 1}", us / max(n, 1),
+            f"batch={avg('batch'):.0f} P={avg('P'):.1f} "
+            f"c_gpu={avg('c_gpu'):.2f} backlog={avg('backlog'):.0f}"))
+    # the paper's qualitative claim: batch grows, placement demotes
+    if len(tr) >= 8:
+        first, last = tr[: n // 4], tr[-n // 4:]
+        g = lambda part, k: sum(p[k] for p in part) / len(part)
+        rows.append((
+            "fig9/adaptation", 0.0,
+            f"batch {g(first, 'batch'):.0f}->{g(last, 'batch'):.0f} "
+            f"P {g(first, 'P'):.1f}->{g(last, 'P'):.1f} "
+            f"c_gpu {g(first, 'c_gpu'):.2f}->{g(last, 'c_gpu'):.2f}"))
+    return rows

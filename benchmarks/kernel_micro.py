@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: wall-clock per call on this host (CPU), with
+the TPU-roofline-projected time as the derived column."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.roofline.analysis import HW_V5E
+
+
+def _bench(fn, *args, iters=5):
+    out = jax.block_until_ready(fn(*args))        # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(full: bool = False):
+    rows = []
+    r = np.random.default_rng(0)
+
+    # flash attention (prefill-like)
+    b, s, h, kv, d = 1, 1024, 8, 4, 64
+    q = jnp.asarray(r.normal(size=(b, s, h, d)), jnp.bfloat16)
+    k = jnp.asarray(r.normal(size=(b, s, kv, d)), jnp.bfloat16)
+    v = jnp.asarray(r.normal(size=(b, s, kv, d)), jnp.bfloat16)
+    for impl in ("kv_scan", "block_causal"):
+        f = jax.jit(lambda q, k, v, impl=impl: ops.flash_attention(
+            q, k, v, causal=True, impl=impl))
+        us = _bench(f, q, k, v)
+        flops = 2 * 2 * b * h * s * s * d * (0.5 if impl == "block_causal"
+                                             else 1.0)
+        rows.append((f"kernel/flash_{impl}/{s}x{h}x{d}", us,
+                     f"tpu_roofline={flops / HW_V5E['peak_flops'] * 1e6:.1f}us"))
+
+    # decode attention
+    b2, s2 = 8, 4096
+    kc = jnp.asarray(r.normal(size=(b2, s2, kv, d)), jnp.bfloat16)
+    vc = jnp.asarray(r.normal(size=(b2, s2, kv, d)), jnp.bfloat16)
+    qd = jnp.asarray(r.normal(size=(b2, h, d)), jnp.bfloat16)
+    kvlen = jnp.full((b2,), s2, jnp.int32)
+    f = jax.jit(lambda *a: ops.decode_attention(*a, impl="einsum"))
+    us = _bench(f, qd, kc, vc, kvlen)
+    bytes_ = 2 * b2 * s2 * kv * d * 2
+    rows.append((f"kernel/decode/{b2}x{s2}", us,
+                 f"tpu_hbm_bound={bytes_ / HW_V5E['hbm_bw'] * 1e6:.1f}us"))
+
+    # retrieval top-k
+    qn, n, dd, kk = 32, 65536, 256, 5
+    qs = jnp.asarray(r.normal(size=(qn, dd)), jnp.float32)
+    db = jnp.asarray(r.normal(size=(n, dd)), jnp.float32)
+    f = jax.jit(lambda *a: ops.retrieval_topk(*a, kk, impl="blocked"))
+    us = _bench(f, qs, db)
+    flops = 2 * qn * n * dd
+    rows.append((f"kernel/topk/{qn}x{n}x{dd}", us,
+                 f"tpu_roofline={flops / HW_V5E['peak_flops'] * 1e6:.1f}us"))
+    return rows

@@ -1,0 +1,54 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads benchmarks/results/dryrun/*.json (produced by repro.launch.dryrun)
+and emits the three roofline terms + dominant bottleneck per cell.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_cells(mesh: str = None):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        d = json.load(open(f))
+        if mesh and d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def run(full: bool = False):
+    rows = []
+    ok = skipped = failed = 0
+    for d in load_cells():
+        tag = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d["status"] == "skipped":
+            skipped += 1
+            if d["mesh"] == "single":
+                rows.append((tag, 0.0, d["reason"]))
+            continue
+        if d["status"] != "ok":
+            failed += 1
+            rows.append((tag, 0.0, f"ERROR {d['error'][:60]}"))
+            continue
+        ok += 1
+        r = d["roofline"]
+        mem_gb = (d["memory_analysis"]["argument_bytes"]
+                  + d["memory_analysis"]["temp_bytes"]) / 2 ** 30
+        dominant = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        rows.append((
+            tag, dominant * 1e6,
+            f"bottleneck={r['bottleneck']} "
+            f"tc={r['t_compute']:.2e} tm={r['t_memory']:.2e} "
+            f"tx={r['t_collective']:.2e} "
+            f"useful={r['useful_flops_ratio']:.2f} "
+            f"mfu_bound={r['mfu_bound']:.2f} mem={mem_gb:.1f}G "
+            f"fits={'Y' if mem_gb <= 16 else 'N'}"))
+    rows.append(("roofline/summary", 0.0,
+                 f"ok={ok} skipped={skipped} failed={failed}"))
+    return rows

@@ -1,0 +1,45 @@
+"""Table 1: average latency breakdown (waiting / retrieval / generation)
+for RAGDoll vs vLLMRAG vs AccRAG on both platforms x both model sizes."""
+from __future__ import annotations
+
+from benchmarks.common import (PF_HIGH, PF_LOW, cost_model,
+                               optimizer_factory, timed, workload)
+from repro.serving.baselines import run_suite
+from repro.serving.request import latency_table
+
+PAPER = {  # (waiting, retrieval, generation) from Table 1
+    ("llama3-8b", "PF-High", "ragdoll"): (162, 282, 36),
+    ("llama3-8b", "PF-High", "serial_vllm"): (677, 307, 16),
+    ("llama3-8b", "PF-High", "serial_acc"): (1494, 307, 151),
+    ("llama3-70b", "PF-High", "ragdoll"): (606, 388, 242),
+    ("llama3-70b", "PF-High", "serial_vllm"): (1808, 303, 219),
+    ("llama3-70b", "PF-High", "serial_acc"): (7936, 302, 1152),
+    ("llama3-8b", "PF-Low", "ragdoll"): (170, 320, 66),
+    ("llama3-8b", "PF-Low", "serial_vllm"): (1640, 293, 57),
+    ("llama3-8b", "PF-Low", "serial_acc"): (3421, 288, 176),
+    ("llama3-70b", "PF-Low", "ragdoll"): (5895, 494, 466),
+    ("llama3-70b", "PF-Low", "serial_vllm"): (12761, 376, 222),
+    ("llama3-70b", "PF-Low", "serial_acc"): (79715, 357, 489),
+}
+
+
+def run(full: bool = False):
+    rows = []
+    arr = workload(full)
+    for model in ("llama3-8b", "llama3-70b"):
+        for hw in (PF_HIGH, PF_LOW):
+            cm = cost_model(model, hw)
+            res, us = timed(lambda: run_suite(
+                cm, optimizer_factory(cm), arr,
+                modes=("ragdoll", "serial_vllm", "serial_acc")))
+            for mode, r in res.items():
+                t = latency_table(r.requests)
+                pw, pr, pg = PAPER[(model, hw.name, mode)]
+                rows.append((
+                    f"tab1/{model}/{hw.name}/{mode}",
+                    us / max(t["n"], 1),
+                    f"W={t['avg_waiting']:.0f}s(paper {pw}) "
+                    f"R={t['avg_retrieval']:.0f}s(paper {pr}) "
+                    f"G={t['avg_generation']:.0f}s(paper {pg}) "
+                    f"avg={t['avg_latency']:.0f}s"))
+    return rows

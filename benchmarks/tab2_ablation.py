@@ -1,0 +1,38 @@
+"""Table 2: ablation of RAGDoll's techniques (PF-High, 8B & 70B).
+
+Paper: w/o pipeline 663/1954 vs full 480/1236; w/o dynamic batch 657/1841;
+FlexGen inference 531/1283; vLLM inference 561/1432.
+"""
+from __future__ import annotations
+
+from benchmarks.common import cost_model, optimizer_factory, timed, workload
+from repro.serving.baselines import run_suite
+from repro.serving.request import latency_table
+
+PAPER = {
+    "llama3-8b": {"ragdoll": 480, "no_pipeline": 663, "static_batch": 657,
+                  "flexgen_prefetch": 531, "vllm_infer": 561},
+    "llama3-70b": {"ragdoll": 1236, "no_pipeline": 1954,
+                   "static_batch": 1841, "flexgen_prefetch": 1283,
+                   "vllm_infer": 1432},
+}
+
+MODES = ("ragdoll", "no_pipeline", "static_batch", "flexgen_prefetch",
+         "vllm_infer")
+
+
+def run(full: bool = False):
+    rows = []
+    arr = workload(full)
+    for model in ("llama3-8b", "llama3-70b"):
+        cm = cost_model(model)
+        res, us = timed(lambda: run_suite(cm, optimizer_factory(cm), arr,
+                                          modes=MODES))
+        base = latency_table(res["ragdoll"].requests)["avg_latency"]
+        for mode in MODES:
+            t = latency_table(res[mode].requests)
+            rows.append((
+                f"tab2/{model}/{mode}", us / max(t["n"], 1) / len(MODES),
+                f"avg={t['avg_latency']:.0f}s paper={PAPER[model][mode]}s "
+                f"vs_full={t['avg_latency'] / base:.2f}x"))
+    return rows

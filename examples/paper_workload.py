@@ -1,0 +1,54 @@
+"""Reproduce the paper's headline experiment (Fig. 7 / Table 1) at scale
+via the calibrated discrete-event simulator: Llama-3 8B/70B on PF-High /
+PF-Low, dynamic Poisson workload 4 -> 16 req/min.
+
+    PYTHONPATH=src python examples/paper_workload.py [--full] [--model 70b]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core.costmodel import (GB, PF_HIGH, PF_LOW, CostModel,
+                                  ModelProfile)
+from repro.core.placement import PlacementOptimizer
+from repro.serving.baselines import run_suite
+from repro.serving.request import latency_table
+from repro.serving.simulator import poisson_workload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="8b", choices=["8b", "70b"])
+    ap.add_argument("--platform", default="PF-High",
+                    choices=["PF-High", "PF-Low"])
+    ap.add_argument("--full", action="store_true",
+                    help="paper-length 20-minute intervals")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    model = "llama3-8b" if args.model == "8b" else "llama3-70b"
+    hw = PF_HIGH if args.platform == "PF-High" else PF_LOW
+    mp = ModelProfile.from_config(get_config(model))
+    cm = CostModel(hw, mp, partition_bytes=8 * GB, num_partitions=32)
+    arr = poisson_workload(
+        interval_s=1200.0 if args.full else 300.0, seed=args.seed)
+    print(f"{model} on {hw.name}: {len(arr)} requests, rates 4->16/min")
+
+    res = run_suite(cm, lambda: PlacementOptimizer(cm, 512, 32), arr,
+                    modes=("ragdoll", "serial_vllm", "serial_acc"))
+    print(f"\n{'system':16s}{'avg':>9s}{'wait':>9s}{'ret':>8s}{'gen':>8s}"
+          f"{'p99':>9s}{'gpu idle':>9s}")
+    base = None
+    for mode, r in res.items():
+        t = latency_table(r.requests)
+        print(f"{mode:16s}{t['avg_latency']:9.0f}{t['avg_waiting']:9.0f}"
+              f"{t['avg_retrieval']:8.0f}{t['avg_generation']:8.0f}"
+              f"{t['p99']:9.0f}{r.gpu_idle_frac:9.2f}")
+        if mode == "ragdoll":
+            base = t["avg_latency"]
+        else:
+            print(f"{'':16s}-> RAGDoll speedup "
+                  f"{t['avg_latency'] / base:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Architecture config registry.
+
+``get_config(name)`` resolves the assigned architecture ids (dash-separated,
+as given in the assignment) plus the paper's own llama3-70b.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from repro.configs.shapes import (SHAPE_ORDER, SHAPES, InputShape,
+                                  shape_applicable)
+
+# assigned pool (10) + paper's own 70B
+_MODULES = {
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "gemma2-2b": "gemma2_2b",
+    "gemma-7b": "gemma_7b",
+    "llama3-8b": "llama3_8b",
+    "chatglm3-6b": "chatglm3_6b",
+    "mamba2-370m": "mamba2_370m",
+    "chameleon-34b": "chameleon_34b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "llama3-70b": "llama3_70b",
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _MODULES if k != "llama3-70b"]
+
+_cache: Dict[str, ModelConfig] = {}
+
+
+def get_config(name: str) -> ModelConfig:
+    key = name.replace("_", "-")
+    if key not in _cache:
+        if key not in _MODULES:
+            raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+        mod = importlib.import_module(f"repro.configs.{_MODULES[key]}")
+        _cache[key] = mod.CONFIG
+    return _cache[key]
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {name: get_config(name) for name in _MODULES}
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "InputShape",
+    "SHAPES", "SHAPE_ORDER", "shape_applicable", "get_config",
+    "all_configs", "ASSIGNED_ARCHS",
+]

@@ -1,0 +1,14 @@
+# RAGDoll's primary contribution: joint memory placement, backlog-aware
+# batch scheduling, active profiling, and the prefetch-queue engine.
+from repro.core.costmodel import (PF_HIGH, PF_LOW, TPU_V5E_HOST, CostModel,
+                                  HardwareProfile, ModelProfile)
+from repro.core.placement import Placement, PlacementOptimizer
+from repro.core.prefetch import PrefetchPolicy, StreamedExecutor
+from repro.core.scheduler import (BacklogScheduler, batch_avg_latency,
+                                  fit_power_law)
+
+__all__ = [
+    "HardwareProfile", "ModelProfile", "CostModel", "PF_HIGH", "PF_LOW",
+    "TPU_V5E_HOST", "Placement", "PlacementOptimizer", "BacklogScheduler",
+    "fit_power_law", "batch_avg_latency", "PrefetchPolicy", "StreamedExecutor",
+]

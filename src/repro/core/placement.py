@@ -1,0 +1,165 @@
+"""Joint hierarchical memory placement (paper §4.2, Eq. 2–3).
+
+One optimizer places DB partitions and LLM tensors (weights, KV cache,
+workspace) across the accelerator / host / disk tiers:
+
+    w_gpu*W + c_gpu*C(B) + H(B)     <= M_gpu          (Eq. 2)
+    w_cpu*W + c_cpu*C(B) + P*M_p    <= M_cpu          (Eq. 3)
+
+The solver mirrors the paper: instead of a closed-form model it sweeps a
+small grid of strategic configurations (resident partitions x placement
+fractions), scores each with the cost model's pipeline-balance objective
+max(t_retrieval, t_generation), and returns the argmin.  ``project`` is
+the OOM-recovery ladder (§5 fault tolerance): demote KV first, then
+weights, then release partitions — never a full restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.core.costmodel import CostModel, HardwareProfile, ModelProfile
+
+
+@dataclass(frozen=True)
+class Placement:
+    w_gpu: float                 # fraction of weights on accelerator
+    w_cpu: float                 # fraction on host (rest on disk)
+    c_gpu: float                 # fraction of KV cache on accelerator
+    c_cpu: float                 # fraction on host
+    resident_partitions: int     # P
+    gen_batch: int               # B
+
+    def __post_init__(self):
+        assert -1e-9 <= self.w_gpu and self.w_gpu + self.w_cpu <= 1 + 1e-9
+        assert -1e-9 <= self.c_gpu and self.c_gpu + self.c_cpu <= 1 + 1e-9
+
+    @property
+    def w_disk(self) -> float:
+        return max(0.0, 1.0 - self.w_gpu - self.w_cpu)
+
+
+@dataclass
+class MemoryUse:
+    gpu: float
+    cpu: float
+
+    def fits(self, hw: HardwareProfile) -> bool:
+        return (self.gpu <= hw.gpu_mem * hw.mem_headroom
+                and self.cpu <= hw.cpu_mem * hw.mem_headroom)
+
+
+class PlacementOptimizer:
+    def __init__(self, cost: CostModel, avg_ctx_len: int = 512,
+                 avg_out_len: int = 128):
+        self.cost = cost
+        self.avg_ctx = avg_ctx_len
+        self.avg_out = avg_out_len
+
+    # ------------------------------------------------------------ memory
+    def memory_use(self, p: Placement) -> MemoryUse:
+        mp, hw = self.cost.mp, self.cost.hw
+        c_total = mp.kv_bytes(p.gen_batch, self.avg_ctx + self.avg_out)
+        h = mp.workspace_bytes(p.gen_batch, self.avg_ctx)
+        gpu = p.w_gpu * mp.weight_bytes + p.c_gpu * c_total + h
+        cpu = (p.w_cpu * mp.weight_bytes + p.c_cpu * c_total
+               + p.resident_partitions * self.cost.partition_mem_bytes)
+        return MemoryUse(gpu=gpu, cpu=cpu)
+
+    def feasible(self, p: Placement) -> bool:
+        return self.memory_use(p).fits(self.cost.hw)
+
+    # ----------------------------------------------------------- project
+    def project(self, p: Placement) -> Placement:
+        """OOM-recovery ladder: demote KV -> demote weights -> release
+        partitions -> shrink batch. Always returns a feasible placement."""
+        q = p
+        steps = 0
+        while not self.feasible(q) and steps < 1000:
+            steps += 1
+            use = self.memory_use(q)
+            hw = self.cost.hw
+            if use.gpu > hw.gpu_mem * hw.mem_headroom:
+                if q.c_gpu > 0.0:
+                    shift = min(q.c_gpu, 0.1)
+                    q = dataclasses.replace(
+                        q, c_gpu=q.c_gpu - shift,
+                        c_cpu=min(q.c_cpu + shift, 1.0 - (q.c_gpu - shift)))
+                elif q.w_gpu > 0.0:
+                    shift = min(q.w_gpu, 0.05)
+                    q = dataclasses.replace(
+                        q, w_gpu=q.w_gpu - shift,
+                        w_cpu=min(q.w_cpu + shift, 1.0 - (q.w_gpu - shift)))
+                elif q.gen_batch > 1:
+                    q = dataclasses.replace(q, gen_batch=q.gen_batch // 2)
+                else:
+                    break
+            else:  # CPU over budget
+                if q.resident_partitions > 0:
+                    q = dataclasses.replace(
+                        q, resident_partitions=q.resident_partitions - 1)
+                elif q.c_cpu > 0.0:
+                    q = dataclasses.replace(q,
+                                            c_cpu=max(q.c_cpu - 0.1, 0.0))
+                elif q.w_cpu > 0.0:
+                    q = dataclasses.replace(q,
+                                            w_cpu=max(q.w_cpu - 0.05, 0.0))
+                elif q.gen_batch > 1:
+                    q = dataclasses.replace(q, gen_batch=q.gen_batch // 2)
+                else:
+                    break
+        return q
+
+    # ------------------------------------------------------------- score
+    def pipeline_times(self, p: Placement, ret_batch: Optional[int] = None
+                       ) -> Tuple[float, float]:
+        t_ret = self.cost.retrieval_time(ret_batch or p.gen_batch,
+                                         p.resident_partitions)
+        t_gen = self.cost.batch_generation_time(
+            p.gen_batch, self.avg_ctx, self.avg_out, p.w_gpu, p.c_gpu,
+            w_cpu=p.w_cpu)
+        return t_ret, t_gen
+
+    def score(self, p: Placement) -> float:
+        """Pipeline-balance objective: minimize max(t_ret, t_gen) per req.
+
+        Tie-break toward strictly-better resource placements (more resident
+        partitions, more weights/KV on faster tiers): when one pipeline
+        dominates, extra capacity on the other side is free.
+        """
+        t_ret, t_gen = self.pipeline_times(p)
+        tie = (p.resident_partitions / max(self.cost.num_partitions, 1)
+               + p.w_gpu + 0.5 * p.c_gpu + 0.25 * p.w_cpu)
+        return max(t_ret, t_gen) / max(p.gen_batch, 1) * (1 - 1e-4 * tie)
+
+    # -------------------------------------------------------------- solve
+    def candidates(self, gen_batch: int) -> List[Placement]:
+        """Strategic grid (paper: 'sample configurations at strategic
+        intervals' rather than exhaustive search)."""
+        mp, hw = self.cost.mp, self.cost.hw
+        out = []
+        p_max = self.cost.num_partitions
+        for pres in {0, p_max // 8, p_max // 4, p_max // 2,
+                     3 * p_max // 4, p_max}:
+            for wg in (0.0, 0.25, 0.5, 0.75, 1.0):
+                for wc_frac in (1.0, 0.5, 0.0):     # host share of the rest
+                    for cg in (0.0, 0.5, 1.0):
+                        wc = (1.0 - wg) * wc_frac
+                        cand = Placement(
+                            w_gpu=wg, w_cpu=wc, c_gpu=cg,
+                            c_cpu=min(1.0 - cg, 1.0),
+                            resident_partitions=pres, gen_batch=gen_batch)
+                        cand = self.project(cand)
+                        if self.feasible(cand):
+                            out.append(cand)
+        return out
+
+    def solve(self, gen_batch: int) -> Placement:
+        cands = self.candidates(gen_batch)
+        if not cands:
+            # fall back to fully-offloaded minimal placement
+            return self.project(Placement(0.0, 0.0, 0.0, 0.0, 0,
+                                          max(gen_batch, 1)))
+        return min(cands, key=self.score)

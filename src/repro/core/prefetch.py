@@ -1,0 +1,171 @@
+"""LLM prefetching pipeline (paper §4.3), TPU-adapted.
+
+The paper replaces FlexGen's fixed next-layer prefetch with a *queue*:
+future layers stream host->device continuously, bounded only by free
+memory; the queue is shallow during prefill (activations occupy memory)
+and deep during decode.
+
+On TPU/JAX the analogue is a layer-streamed executor: per-layer parameter
+slices live in host memory and are staged to the device ahead of compute.
+``jax.device_put`` is asynchronous, so issuing the puts for the next
+``depth`` layers before computing the current one overlaps transfer with
+compute exactly like a background CUDA stream; XLA renders them as async
+copy-start/copy-done pairs on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+@dataclass
+class PrefetchPolicy:
+    """Phase-aware queue depth (conservative prefill, aggressive decode)."""
+
+    max_depth: int = 8
+    prefill_depth: int = 1
+
+    def depth(self, phase: str, free_bytes: float,
+              layer_bytes: float) -> int:
+        if free_bytes == float("inf"):
+            cap = self.max_depth
+        else:
+            cap = int(free_bytes // max(layer_bytes, 1.0))
+        if phase == "prefill":
+            return max(1, min(self.prefill_depth, cap))
+        return max(1, min(self.max_depth, cap))
+
+
+def _unstack(tree, reps: int) -> List[Any]:
+    """Split stacked (R, ...) params into R per-layer pytrees (host-side)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for r in range(reps):
+        out.append(jax.tree.unflatten(treedef, [l[r] for l in leaves]))
+    return out
+
+
+class StreamedExecutor:
+    """Layer-streamed decode/prefill with a host->device prefetch queue.
+
+    Used by the real serving engine for offloading-mode generation: model
+    weights beyond ``resident_layers`` stay on host; each step streams them
+    through the device with lookahead ``policy.depth(phase, ...)``.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, policy: PrefetchPolicy,
+                 device=None, resident_layers: int = 0,
+                 free_bytes: float = float("inf")):
+        self.cfg = cfg
+        self.policy = policy
+        self.device = device or jax.devices()[0]
+        self.free_bytes = free_bytes
+        reps = transformer.scanned_repeats(cfg)
+        pattern = cfg.layer_pattern
+
+        # flatten the stacked blocks into a per-layer host-resident list
+        self.layers: List[Tuple[Any, Any]] = []   # (kind, params)
+        kinds = cfg.layer_kinds()
+        for i, lp in enumerate(params.get("prefix", [])):
+            self.layers.append(((kinds[i][0], "dense"), lp))
+        per_pos = [_unstack(b, reps) for b in params["blocks"]]
+        for r in range(reps):
+            for j, kind in enumerate(pattern):
+                self.layers.append((kind, per_pos[j][r]))
+        self.n_layers = len(self.layers)
+        self.resident = min(resident_layers, self.n_layers)
+        # head/tail params stay on device
+        self.top = {k: v for k, v in params.items()
+                    if k not in ("blocks", "prefix")}
+        self.top = jax.device_put(self.top, self.device)
+        # pin the resident prefix of layers on device
+        self.layers = [
+            (kind, jax.device_put(lp, self.device) if i < self.resident
+             else lp)
+            for i, (kind, lp) in enumerate(self.layers)]
+        self._apply_cache: Dict[Any, Any] = {}
+        self.layer_bytes = (
+            sum(l.size * l.dtype.itemsize
+                for l in jax.tree.leaves([lp for _, lp in self.layers]))
+            / max(self.n_layers, 1))
+
+    # ------------------------------------------------------------ helpers
+    def _apply_fn(self, kind, mode):
+        key = (kind, mode)
+        if key not in self._apply_cache:
+            cfg = self.cfg
+
+            def fn(lp, x, cache, pos):
+                return transformer.apply_layer(
+                    lp, x, cfg, kind, mode=mode, cache=cache, pos=pos,
+                    ctx=None, moe_strategy="tp")
+
+            self._apply_cache[key] = jax.jit(fn)
+        return self._apply_cache[key]
+
+    def _stream(self, x, caches, pos, mode: str):
+        depth = self.policy.depth(
+            "prefill" if mode == "prefill" else "decode",
+            self.free_bytes, self.layer_bytes)
+        staged: Dict[int, Any] = {}
+
+        def ensure(i):
+            if i >= self.n_layers or i in staged:
+                return
+            kind, lp = self.layers[i]
+            if i < self.resident:
+                staged[i] = lp
+            else:
+                # async host->device copy (the prefetch queue entry)
+                staged[i] = jax.device_put(lp, self.device)
+
+        # warm the queue
+        for i in range(min(depth, self.n_layers)):
+            ensure(i)
+        new_caches = []
+        for i in range(self.n_layers):
+            ensure(i + depth)           # keep the queue full
+            kind, _ = self.layers[i]
+            lp = staged.pop(i)
+            cache_i = caches[i] if caches is not None else None
+            x, nc, _ = self._apply_fn(kind, mode)(lp, x, cache_i, pos)
+            new_caches.append(nc)
+        return x, (new_caches if caches is not None else None)
+
+    # ------------------------------------------------------------- public
+    def prefill(self, inputs, caches: List[dict], enc_embeds=None):
+        cfg = self.cfg
+        x = transformer._embed_inputs(self.top, cfg, inputs)
+        x, new_caches = self._stream(x, caches, None, "prefill")
+        from repro.models import layers as L
+        x = L.rms_norm(x[:, -1:], self.top["final_norm"], cfg.norm_eps)
+        logits = transformer.unembed(self.top, cfg, x, None)[:, 0]
+        return logits, new_caches
+
+    def decode(self, inputs, caches: List[dict], pos):
+        cfg = self.cfg
+        x = transformer._embed_inputs(self.top, cfg, inputs)
+        x, new_caches = self._stream(x, caches, pos, "decode")
+        from repro.models import layers as L
+        x = L.rms_norm(x, self.top["final_norm"], cfg.norm_eps)
+        logits = transformer.unembed(self.top, cfg, x, None)[:, 0]
+        return logits, new_caches
+
+    # per-layer cache helpers (unstacked layout)
+    def init_caches(self, batch: int, cache_len: int, dtype=jnp.float32):
+        from repro.models import model as M
+        out = []
+        kinds = [k for k, _ in self.layers]
+        for kind in kinds:
+            spec = M._layer_cache_spec(self.cfg, kind[0], batch, cache_len,
+                                       dtype, None)
+            out.append(jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                    spec))
+        return out

@@ -1,0 +1,6 @@
+from repro.ft.faults import (CheckpointedRetrieval, OOMRecovery,
+                             retry_with_backoff)
+from repro.ft.elastic import ElasticMesh, StragglerMonitor
+
+__all__ = ["CheckpointedRetrieval", "OOMRecovery", "retry_with_backoff",
+           "ElasticMesh", "StragglerMonitor"]

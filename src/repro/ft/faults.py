@@ -1,0 +1,126 @@
+"""Fault tolerance (paper §5): checkpointed retrieval + OOM recovery ladder.
+
+* Retrieval checkpoints intermediate per-partition results; a failure
+  resumes from the last completed partition instead of restarting the
+  whole sweep.
+* Generation OOM triggers the recovery ladder (demote KV -> demote
+  weights -> release partitions -> shrink batch) via
+  ``PlacementOptimizer.project`` — never a full restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.placement import Placement, PlacementOptimizer
+
+
+def retry_with_backoff(retries: int = 3, base_delay: float = 0.01,
+                       exceptions=(RuntimeError, MemoryError)):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapped(*a, **kw):
+            delay = base_delay
+            for attempt in range(retries + 1):
+                try:
+                    return fn(*a, **kw)
+                except exceptions:
+                    if attempt == retries:
+                        raise
+                    time.sleep(delay)
+                    delay *= 2
+        return wrapped
+    return deco
+
+
+class CheckpointedRetrieval:
+    """Per-partition checkpointing around VectorStore.search.
+
+    ``fault_hook(pid)`` (tests) may raise to simulate a mid-sweep failure;
+    completed partitions are never recomputed on resume.
+    """
+
+    def __init__(self, store, fault_hook: Optional[Callable] = None):
+        self.store = store
+        self.fault_hook = fault_hook
+        self._ckpt: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self.partitions_resumed = 0
+
+    def search(self, queries: np.ndarray, top_k: int,
+               max_attempts: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+        pids = sorted(self.store.partitions)
+        attempt = 0
+        while True:
+            attempt += 1
+            try:
+                for pid in pids:
+                    if pid in self._ckpt:
+                        continue            # restored from checkpoint
+                    if self.fault_hook is not None:
+                        self.fault_hook(pid)
+                    s, i = self.store.search(queries, top_k,
+                                             partitions=[pid])
+                    self._ckpt[pid] = (s, i)
+                break
+            except (RuntimeError, MemoryError):
+                if attempt >= max_attempts:
+                    raise
+                self.partitions_resumed = len(self._ckpt)
+                continue
+        all_s = np.concatenate([self._ckpt[p][0] for p in pids], axis=1)
+        all_i = np.concatenate([self._ckpt[p][1] for p in pids], axis=1)
+        self._ckpt.clear()
+        order = np.argsort(-all_s, axis=1)[:, :top_k]
+        return (np.take_along_axis(all_s, order, axis=1),
+                np.take_along_axis(all_i, order, axis=1))
+
+
+@dataclass
+class OOMRecovery:
+    """Generation-side OOM ladder (paper §5).
+
+    ``run(fn, placement)`` executes fn(placement); on OOM it demotes the
+    placement one rung (more KV to host, then weights, then fewer resident
+    partitions, then half the batch) and retries.
+    """
+
+    opt: PlacementOptimizer
+    max_attempts: int = 6
+    history: List[Placement] = field(default_factory=list)
+
+    def demote(self, p: Placement) -> Placement:
+        if p.c_gpu > 0:
+            q = dataclasses.replace(p, c_gpu=max(p.c_gpu - 0.25, 0.0),
+                                    c_cpu=min(p.c_cpu + 0.25, 1.0))
+        elif p.w_gpu > 0:
+            q = dataclasses.replace(p, w_gpu=max(p.w_gpu - 0.15, 0.0),
+                                    w_cpu=min(p.w_cpu + 0.15, 1.0))
+        elif p.resident_partitions > 0:
+            q = dataclasses.replace(
+                p, resident_partitions=p.resident_partitions // 2)
+        elif p.gen_batch > 1:
+            q = dataclasses.replace(p, gen_batch=p.gen_batch // 2)
+        else:
+            q = p
+        return self.opt.project(q)
+
+    def run(self, fn: Callable[[Placement], object], placement: Placement):
+        p = placement
+        for attempt in range(self.max_attempts):
+            try:
+                return fn(p), p
+            except (MemoryError, RuntimeError) as e:
+                if "RESOURCE_EXHAUSTED" not in str(e) and \
+                        not isinstance(e, MemoryError):
+                    raise
+                self.history.append(p)
+                q = self.demote(p)
+                if q == p:
+                    raise
+                p = q
+        raise MemoryError("OOM recovery ladder exhausted")

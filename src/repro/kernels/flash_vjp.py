@@ -1,0 +1,210 @@
+"""Memory-efficient attention with a custom VJP (flash backward).
+
+Differentiating the block-scan attention directly makes XLA save every
+block's score matrix as a scan residual — O(n_blocks * Sq * block) bytes
+(tens of GB at 4k-32k sequences).  The flash-attention fix: save only
+(out, lse) in the forward; the backward *recomputes* each block's
+probabilities from q, k and the saved log-sum-exp, accumulating dq/dk/dv
+in a second block scan.  Residual memory drops to O(Sq) per head.
+
+One block-pair formulation covers causal (lower-triangular pairs),
+sliding-window (pair pruning + in-block mask), bidirectional (full grid),
+kv_len padding masks, and logit softcap (tanh chain rule in both passes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pairs(nq: int, nk: int, causal: bool, window: Optional[int],
+           blk: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    pairs = []
+    for i in range(nq):
+        for j in range(nk):
+            if causal and j > i:
+                continue
+            if window is not None and (i - j) * blk >= window + blk:
+                continue
+            pairs.append((i, j))
+    return (jnp.array([p[0] for p in pairs], jnp.int32),
+            jnp.array([p[1] for p in pairs], jnp.int32))
+
+
+def _block_mask(i, j, blk, causal, window, kv_len, q_offset):
+    q_pos = i * blk + jnp.arange(blk)[:, None] + q_offset     # (bq, 1)
+    k_pos = j * blk + jnp.arange(blk)[None, :]                # (1, bk)
+    mask = k_pos < kv_len[:, None, None]                      # (B, bq, bk)
+    if causal:
+        mask &= (k_pos <= q_pos)[None]
+    if window is not None:
+        mask &= (k_pos > q_pos - window)[None]
+    return mask[:, None, None]                                # (B,1,1,bq,bk)
+
+
+def _sc_fwd(s, cap):
+    if cap is None:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+def _sc_bwd(s_capped, cap, ds):
+    if cap is None:
+        return ds
+    return ds * (1.0 - (s_capped / cap) ** 2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def flash_attention_vjp(q, k, v, kv_len, causal, window, softcap,
+                        q_offset, scale, blk):
+    out, _ = _fwd(q, k, v, kv_len, causal, window, softcap, q_offset,
+                  scale, blk)
+    return out
+
+
+def _fwd(q, k, v, kv_len, causal, window, softcap, q_offset, scale, blk):
+    b, kvh, g, sq, d = q.shape
+    sk = k.shape[2]
+    nq, nk = sq // blk, sk // blk
+    pi, pj = _pairs(nq, nk, causal, window, blk)
+    q32 = q.astype(jnp.float32) * scale
+
+    # NOTE: block indices are read via a carried step counter, NOT scan xs
+    # — with xs-only dependence XLA hoists the (cheap) mask computation out
+    # of the loop and materializes ALL n_pairs masks at once (gigabytes).
+    def body(carry, _):
+        m, l, acc, t = carry
+        i = jax.lax.dynamic_index_in_dim(pi, t, keepdims=False)
+        j = jax.lax.dynamic_index_in_dim(pj, t, keepdims=False)
+        qi = jax.lax.dynamic_slice_in_dim(q32, i * blk, blk, axis=3)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * blk, blk, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * blk, blk, axis=2)
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qi, kj.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        s = _sc_fwd(s, softcap)
+        mask = _block_mask(i, j, blk, causal, window, kv_len, q_offset)
+        s = jnp.where(mask, s, NEG_INF)
+        mi = jax.lax.dynamic_slice_in_dim(m, i * blk, blk, axis=3)
+        li = jax.lax.dynamic_slice_in_dim(l, i * blk, blk, axis=3)
+        ai = jax.lax.dynamic_slice_in_dim(acc, i * blk, blk, axis=3)
+        m_new = jnp.maximum(mi, s.max(axis=-1))
+        corr = jnp.exp(mi - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = li * corr + p.sum(axis=-1)
+        a_new = ai * corr[..., None] + jnp.einsum(
+            "bkgqs,bksd->bkgqd", p, vj.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, i * blk, axis=3)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, i * blk, axis=3)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, i * blk,
+                                                  axis=3)
+        return (m, l, acc, t + 1), None
+
+    dv = v.shape[-1]
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(
+        body, (m0, l0, a0, jnp.zeros((), jnp.int32)), None,
+        length=pi.shape[0])
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out, lse
+
+
+def _fwd_rule(q, k, v, kv_len, causal, window, softcap, q_offset, scale,
+              blk):
+    out, lse = _fwd(q, k, v, kv_len, causal, window, softcap, q_offset,
+                    scale, blk)
+    return out, (q, k, v, kv_len, out, lse)
+
+
+def _bwd_rule(causal, window, softcap, q_offset, scale, blk, res, dout):
+    q, k, v, kv_len, out, lse = res
+    b, kvh, g, sq, d = q.shape
+    sk = k.shape[2]
+    nq, nk = sq // blk, sk // blk
+    pi, pj = _pairs(nq, nk, causal, window, blk)
+    q32 = q.astype(jnp.float32) * scale
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    g32 = dout.astype(jnp.float32)
+    # delta = rowsum(dout * out)
+    delta = jnp.sum(g32 * out.astype(jnp.float32), axis=-1)   # (B,KV,G,Sq)
+
+    def body(carry, _):
+        dq, dk, dv_, t = carry
+        i = jax.lax.dynamic_index_in_dim(pi, t, keepdims=False)
+        j = jax.lax.dynamic_index_in_dim(pj, t, keepdims=False)
+        qi = jax.lax.dynamic_slice_in_dim(q32, i * blk, blk, axis=3)
+        kj = jax.lax.dynamic_slice_in_dim(k32, j * blk, blk, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(v32, j * blk, blk, axis=2)
+        gi = jax.lax.dynamic_slice_in_dim(g32, i * blk, blk, axis=3)
+        lse_i = jax.lax.dynamic_slice_in_dim(lse, i * blk, blk, axis=3)
+        del_i = jax.lax.dynamic_slice_in_dim(delta, i * blk, blk, axis=3)
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qi, kj,
+                       preferred_element_type=jnp.float32)
+        sc = _sc_fwd(s, softcap)
+        mask = _block_mask(i, j, blk, causal, window, kv_len, q_offset)
+        sc_m = jnp.where(mask, sc, NEG_INF)
+        p = jnp.exp(sc_m - lse_i[..., None])                  # (B,KV,G,bq,bk)
+        dv_j = jnp.einsum("bkgqs,bkgqd->bksd", p, gi,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bkgqd,bksd->bkgqs", gi, vj,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - del_i[..., None])
+        ds = _sc_bwd(sc, softcap, ds)
+        ds = jnp.where(mask, ds, 0.0)
+        dq_i = jnp.einsum("bkgqs,bksd->bkgqd", ds, kj,
+                          preferred_element_type=jnp.float32) * scale
+        dk_j = jnp.einsum("bkgqs,bkgqd->bksd", ds, qi,
+                          preferred_element_type=jnp.float32)
+        # accumulate
+        cur = jax.lax.dynamic_slice_in_dim(dq, i * blk, blk, axis=3)
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, cur + dq_i, i * blk,
+                                                 axis=3)
+        cur = jax.lax.dynamic_slice_in_dim(dk, j * blk, blk, axis=2)
+        dk = jax.lax.dynamic_update_slice_in_dim(dk, cur + dk_j, j * blk,
+                                                 axis=2)
+        cur = jax.lax.dynamic_slice_in_dim(dv_, j * blk, blk, axis=2)
+        dv_ = jax.lax.dynamic_update_slice_in_dim(dv_, cur + dv_j, j * blk,
+                                                  axis=2)
+        return (dq, dk, dv_, t + 1), None
+
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    dk0 = jnp.zeros(k.shape, jnp.float32)
+    dv0 = jnp.zeros(v.shape, jnp.float32)
+    (dq, dk, dv_, _), _ = jax.lax.scan(
+        body, (dq0, dk0, dv0, jnp.zeros((), jnp.int32)), None,
+        length=pi.shape[0])
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv_.astype(v.dtype),
+            None)
+
+
+flash_attention_vjp.defvjp(_fwd_rule, _bwd_rule)
+
+
+def flash_attention_train(q, k, v, *, causal=True, window=None,
+                          softcap=None, kv_len=None, q_offset=0,
+                          scale=None, block=256):
+    """(B,Sq,H,D)/(B,Sk,KV,D) wrapper around the grouped custom-VJP core."""
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    grp = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    blk = min(block, sq, sk)
+    assert sq % blk == 0 and sk % blk == 0, (sq, sk, blk)
+    q_ = q.reshape(b, sq, kvh, grp, d).transpose(0, 2, 3, 1, 4)
+    k_ = k.transpose(0, 2, 1, 3)
+    v_ = v.transpose(0, 2, 1, 3)
+    if kv_len is None:
+        kv_len = jnp.full((b,), sk, jnp.int32)
+    out = flash_attention_vjp(q_, k_, v_, kv_len.astype(jnp.int32),
+                              causal, window, softcap, q_offset, scale, blk)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv)

@@ -1,0 +1,117 @@
+"""Pure-jnp reference oracles for every kernel in this package.
+
+These are the *semantics*: naive, materializing implementations that every
+optimized path (chunked jnp and Pallas) is tested against with
+``assert_allclose`` across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def repeat_kv(k: jnp.ndarray, num_heads: int) -> jnp.ndarray:
+    """(B, S, KV, D) -> (B, S, H, D) by repeating each kv head H/KV times."""
+    b, s, kv, d = k.shape
+    assert num_heads % kv == 0
+    reps = num_heads // kv
+    return jnp.repeat(k, reps, axis=2)
+
+
+def attention_reference(
+    q: jnp.ndarray,                # (B, Sq, H, D)
+    k: jnp.ndarray,                # (B, Sk, KV, D)
+    v: jnp.ndarray,                # (B, Sk, KV, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding window size (local attention)
+    softcap: Optional[float] = None,
+    kv_len: Optional[jnp.ndarray] = None,   # (B,) valid kv length
+    q_offset: int | jnp.ndarray = 0,        # absolute position of q[:, 0]
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Naive attention with GQA / causal / sliding-window / softcap / kv_len."""
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    scale = scale if scale is not None else d ** -0.5
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = _softcap(scores, softcap)
+
+    q_pos = jnp.arange(sq)[:, None] + q_offset          # (Sq, 1)
+    k_pos = jnp.arange(sk)[None, :]                     # (1, Sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    mask = jnp.broadcast_to(mask[None, None], (b, 1, sq, sk))
+    if kv_len is not None:
+        mask &= (k_pos < kv_len[:, None, None, None])
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_reference(
+    q: jnp.ndarray,        # (B, H, D) — single new token per sequence
+    k_cache: jnp.ndarray,  # (B, S, KV, D)
+    v_cache: jnp.ndarray,  # (B, S, KV, D)
+    kv_len: jnp.ndarray,   # (B,) number of valid cache entries (incl. current)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    out = attention_reference(
+        q[:, None], k_cache, v_cache, causal=False, window=None,
+        softcap=softcap, kv_len=kv_len, scale=scale)
+    if window is not None:
+        # sliding window over the cache tail: positions > kv_len - window
+        b, s, kvh, d = k_cache.shape
+        k_pos = jnp.arange(s)[None, :]
+        keep = (k_pos >= (kv_len[:, None] - window)) & (k_pos < kv_len[:, None])
+        h = q.shape[1]
+        scores = jnp.einsum(
+            "bhd,bkhd->bhk", q.astype(jnp.float32),
+            repeat_kv(k_cache, h).astype(jnp.float32))
+        scale_ = scale if scale is not None else q.shape[-1] ** -0.5
+        scores = _softcap(scores * scale_, softcap)
+        scores = jnp.where(keep[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhk,bkhd->bhd", probs,
+                         repeat_kv(v_cache, h).astype(jnp.float32))
+        return out.astype(q.dtype)
+    return out[:, 0]
+
+
+def topk_reference(
+    queries: jnp.ndarray,   # (Q, D)
+    database: jnp.ndarray,  # (N, D)
+    k: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact top-k inner-product search: full matmul + lax.top_k."""
+    scores = jnp.einsum("qd,nd->qn", queries.astype(jnp.float32),
+                        database.astype(jnp.float32))
+    return jax.lax.top_k(scores, k)
+
+
+def rmsnorm_reference(x: jnp.ndarray, w: jnp.ndarray,
+                      eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)

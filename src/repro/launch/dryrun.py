@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape x mesh), builds the step function
+(train / prefill / decode), lowers it with ShapeDtypeStruct stand-ins and
+explicit in/out shardings, compiles, and records memory analysis +
+cost analysis + collective schedule for the roofline report.
+
+MUST set XLA_FLAGS before any jax import (first two lines of this file):
+jax locks the host device count at first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_applicable
+from repro.configs.shapes import SHAPE_ORDER
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model, input_specs
+from repro.roofline.analysis import analyze_compiled
+from repro.sharding.specs import (MeshContext, from_mesh, param_pspecs,
+                                  shard_extra_dim)
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+
+# ---------------------------------------------------------------------------
+# sharding for caches and inputs
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cache_specs, ctx: MeshContext, batch: int):
+    """Cache sharding: batch over data axes; the long sequence dim of KV /
+    latent caches over ``model`` (sequence-parallel KV — decode attention
+    reduces over shards with a small per-layer all-reduce)."""
+    shard_b = ctx.shard_tokens(batch)
+    bax = ctx.batch_axes if shard_b else None
+    m = ctx.model_axis
+    tp = ctx.tp_size
+
+    def visit(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        name = keys[-1]
+        stacked = "blocks" in keys
+        shape = leaf.shape[1:] if stacked else leaf.shape
+
+        def wrap(*axes):
+            return P(None, *axes) if stacked else P(*axes)
+
+        if name in ("k", "v", "ck", "cv"):          # (B, S, KV, hd)
+            s_ax = m if shape[1] % tp == 0 else None
+            return wrap(bax, s_ax, None, None)
+        if name in ("ckv", "krope"):                # (B, S, r)
+            s_ax = m if shape[1] % tp == 0 else None
+            return wrap(bax, s_ax, None)
+        if name == "state":                         # (B, H, P, N)
+            h_ax = m if shape[1] % tp == 0 else None
+            return wrap(bax, h_ax, None, None)
+        if name == "conv":                          # (B, k-1, C)
+            return wrap(bax, None, None)
+        return wrap(*(None,) * len(shape))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_specs)
+
+
+def input_pspec(spec, ctx: MeshContext, batch: int):
+    shard_b = ctx.shard_tokens(batch)
+    bax = ctx.batch_axes if shard_b else None
+    m = ctx.model_axis
+    if len(spec.shape) == 1:                        # pos (B,)
+        return P(bax)
+    if len(spec.shape) == 2:                        # tokens (B, S)
+        s_ax = m if spec.shape[1] % ctx.tp_size == 0 else None
+        return P(bax, s_ax)
+    s_ax = m if spec.shape[1] % ctx.tp_size == 0 else None
+    return P(bax, s_ax, None)                       # embeds (B, S, D)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def build_and_compile(arch: str, shape_name: str, multi_pod: bool,
+                      moe_strategy: str = "tp",
+                      offload_opt: bool = False,
+                      fsdp: Optional[bool] = None,
+                      grad_accum: int = 1,
+                      donate: bool = True) -> Dict[str, Any]:
+    t_start = time.time()
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = from_mesh(mesh)
+    chips = mesh.devices.size
+    model = Model(cfg, ctx=ctx, moe_strategy=moe_strategy, remat=True)
+    specs = input_specs(cfg, shape)
+
+    param_shapes = model.param_specs()
+    pspecs = param_pspecs(param_shapes, ctx)
+    if fsdp is None:
+        # FSDP when model-parallel-only params exceed ~1/4 of HBM
+        fsdp = cfg.param_count() * 2 / ctx.tp_size > 4 * 2**30
+    if fsdp:
+        pspecs = shard_extra_dim(pspecs, param_shapes, ctx)
+    param_sh = named(mesh, pspecs)
+    repl = NamedSharding(mesh, P())
+
+    n_active = cfg.param_count(active_only=True)
+    b = shape.global_batch
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(adamw_init, param_shapes)
+        zpspecs = shard_extra_dim(pspecs, param_shapes, ctx)   # ZeRO-1
+        mem_kind = "pinned_host" if offload_opt else None
+
+        # opt-state shardings mirror the params; optionally host-resident
+        # (the paper's hierarchical-placement idea applied to training
+        # state: moments/master stream HBM<->host around the update)
+        def opt_named(sp):
+            if mem_kind:
+                return NamedSharding(mesh, sp, memory_kind=mem_kind)
+            return NamedSharding(mesh, sp)
+        opt_sh = {
+            "step": repl,
+            "mu": jax.tree.map(opt_named, zpspecs,
+                               is_leaf=lambda x: isinstance(x, P)),
+            "nu": jax.tree.map(opt_named, zpspecs,
+                               is_leaf=lambda x: isinstance(x, P)),
+            "master": jax.tree.map(opt_named, zpspecs,
+                                   is_leaf=lambda x: isinstance(x, P)),
+        }
+        opt_cfg = AdamWConfig()
+        has_enc = "enc_embeds" in specs
+
+        from repro.training.train_loop import make_train_step
+        base_step = make_train_step(model, opt_cfg, grad_accum=grad_accum)
+
+        if has_enc:
+            def step_fn(params, opt_state, inputs, labels, enc_embeds):
+                batch = {"inputs": inputs, "labels": labels,
+                         "enc_embeds": enc_embeds}
+                new_p, new_o, _, mets = base_step(params, opt_state, None,
+                                                  batch)
+                return new_p, new_o, mets
+        else:
+            def step_fn(params, opt_state, inputs, labels):
+                batch = {"inputs": inputs, "labels": labels}
+                new_p, new_o, _, mets = base_step(params, opt_state, None,
+                                                  batch)
+                return new_p, new_o, mets
+
+        args = [param_shapes, opt_shapes, specs["inputs"], specs["labels"]]
+        in_sh = [param_sh, opt_sh,
+                 NamedSharding(mesh, input_pspec(specs["inputs"], ctx, b)),
+                 NamedSharding(mesh, input_pspec(specs["labels"], ctx, b))]
+        if has_enc:
+            args.append(specs["enc_embeds"])
+            in_sh.append(NamedSharding(
+                mesh, input_pspec(specs["enc_embeds"], ctx, b)))
+        out_sh = (param_sh, opt_sh, None)
+        jitted = jax.jit(step_fn, in_shardings=tuple(in_sh),
+                         out_shardings=out_sh,
+                         donate_argnums=(0, 1) if donate else ())
+        tokens = specs["inputs"].shape[0] * (
+            specs["inputs"].shape[1] if len(specs["inputs"].shape) > 1 else 1)
+        model_flops = 6.0 * n_active * tokens / chips
+
+    elif shape.kind == "prefill":
+        csh = named(mesh, cache_pspecs(specs["cache"], ctx, b))
+        has_enc = "enc_embeds" in specs
+        if has_enc:
+            def step_fn(params, inputs, cache, enc_embeds):
+                return model.prefill(params, inputs, cache,
+                                     enc_embeds=enc_embeds)
+        else:
+            def step_fn(params, inputs, cache):
+                return model.prefill(params, inputs, cache)
+        args = [param_shapes, specs["inputs"], specs["cache"]]
+        in_sh = [param_sh,
+                 NamedSharding(mesh, input_pspec(specs["inputs"], ctx, b)),
+                 csh]
+        if has_enc:
+            args.append(specs["enc_embeds"])
+            in_sh.append(NamedSharding(
+                mesh, input_pspec(specs["enc_embeds"], ctx, b)))
+        jitted = jax.jit(step_fn, in_shardings=tuple(in_sh),
+                         donate_argnums=(2,) if donate else ())
+        tokens = specs["inputs"].shape[0] * specs["inputs"].shape[1]
+        if has_enc:
+            tokens += specs["enc_embeds"].shape[0] * \
+                specs["enc_embeds"].shape[1]
+        model_flops = 2.0 * n_active * tokens / chips
+
+    else:  # decode
+        csh = named(mesh, cache_pspecs(specs["cache"], ctx, b))
+
+        def step_fn(params, inputs, cache, pos):
+            return model.decode(params, inputs, cache, pos)
+
+        args = [param_shapes, specs["inputs"], specs["cache"], specs["pos"]]
+        in_sh = [param_sh,
+                 NamedSharding(mesh, input_pspec(specs["inputs"], ctx, b)),
+                 csh,
+                 NamedSharding(mesh, input_pspec(specs["pos"], ctx, b))]
+        jitted = jax.jit(step_fn, in_shardings=tuple(in_sh),
+                         donate_argnums=(2,) if donate else ())
+        model_flops = 2.0 * n_active * b / chips
+
+    lowered = jitted.lower(*args)
+    t_lower = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time()
+
+    mesh_name = "multi" if multi_pod else "single"
+    report = analyze_compiled(compiled, arch=arch, shape=shape_name,
+                              mesh_name=mesh_name, chips=chips,
+                              model_flops_per_device=model_flops)
+    mem = compiled.memory_analysis()
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower - t_start, 1),
+        "compile_s": round(t_compile - t_lower, 1),
+        "memory_analysis": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "roofline": report.to_dict(),
+    }
+    return out
+
+
+def cell_path(arch: str, shape_name: str, mesh_name: str,
+              results_dir: str = RESULTS_DIR) -> str:
+    os.makedirs(results_dir, exist_ok=True)
+    return os.path.join(results_dir,
+                        f"{arch}__{shape_name}__{mesh_name}.json")
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             results_dir: str = RESULTS_DIR, force: bool = False,
+             **kw) -> Dict[str, Any]:
+    path = cell_path(arch, shape_name, mesh_name, results_dir)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    try:
+        out = build_and_compile(arch, shape_name, mesh_name == "multi", **kw)
+    except Exception as e:
+        out = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-3000:]}
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPE_ORDER))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--moe-strategy", default="tp", choices=["tp", "ep"])
+    ap.add_argument("--offload-opt", action="store_true",
+                    help="place optimizer state in pinned_host memory "
+                         "(TPU deployments; unsupported by the CPU SPMD "
+                         "partitioner)")
+    ap.add_argument("--results-dir", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape in SHAPE_ORDER:
+                for mesh_name in ("single", "multi"):
+                    cells.append((arch, shape, mesh_name))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    failures = 0
+    for arch, shape, mesh_name in cells:
+        out = run_cell(arch, shape, mesh_name, args.results_dir,
+                       force=args.force, moe_strategy=args.moe_strategy,
+                       offload_opt=args.offload_opt)
+        status = out["status"]
+        if status == "ok":
+            r = out["roofline"]
+            mem_gb = (out["memory_analysis"]["argument_bytes"]
+                      + out["memory_analysis"]["temp_bytes"]) / 2**30
+            print(f"[OK]   {arch:24s} {shape:12s} {mesh_name:6s} "
+                  f"compile={out['compile_s']:6.1f}s mem/dev={mem_gb:6.2f}G "
+                  f"bottleneck={r['bottleneck']:10s} "
+                  f"t=({r['t_compute']:.3e},{r['t_memory']:.3e},"
+                  f"{r['t_collective']:.3e})s")
+        elif status == "skipped":
+            print(f"[SKIP] {arch:24s} {shape:12s} {mesh_name:6s} "
+                  f"{out['reason']}")
+        else:
+            failures += 1
+            print(f"[FAIL] {arch:24s} {shape:12s} {mesh_name:6s} "
+                  f"{out['error']}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

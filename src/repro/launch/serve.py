@@ -1,0 +1,94 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Brings up the full RAGDoll engine (real threads, real vector store with
+disk-spilled partitions, real generation on a reduced model) and replays
+a Poisson workload against it, printing the latency table.  ``--serial``
+runs the baseline engine for comparison.
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.costmodel import CostModel, ModelProfile, PF_HIGH
+from repro.core.placement import PlacementOptimizer
+from repro.core.scheduler import BacklogScheduler
+from repro.retrieval.embedding import HashEmbedder
+from repro.retrieval.vectorstore import VectorStore
+from repro.serving.engine import RagdollEngine, SerialRAGEngine
+from repro.serving.generator import Generator, GeneratorConfig
+from repro.serving.request import Request, latency_table
+
+
+def build_corpus(n: int):
+    rng = random.Random(7)
+    topics = ["astronomy", "history", "biology", "music", "geology",
+              "painting", "chemistry", "politics", "literature", "sports"]
+    return [f"{topics[i % len(topics)]} fact {i}: " +
+            " ".join(f"w{rng.randrange(500)}" for _ in range(24))
+            for i in range(n)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=120.0,
+                    help="requests per minute")
+    ap.add_argument("--chunks", type=int, default=800)
+    ap.add_argument("--partitions", type=int, default=8)
+    ap.add_argument("--resident", type=int, default=4)
+    ap.add_argument("--serial", action="store_true")
+    ap.add_argument("--streamed", action="store_true",
+                    help="use the offloading StreamedExecutor")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model_params = jax.random.PRNGKey(args.seed)
+    from repro.models.model import Model
+    params = Model(cfg, remat=False).init(model_params, jnp.float32)
+    gen = Generator(cfg, params, GeneratorConfig(ctx_len=48,
+                                                 max_new_tokens=8),
+                    streamed=args.streamed)
+
+    emb = HashEmbedder(dim=128)
+    with tempfile.TemporaryDirectory() as root:
+        store = VectorStore.build(build_corpus(args.chunks), emb,
+                                  num_partitions=args.partitions, root=root)
+        for pid in range(args.resident, args.partitions):
+            store.spill(pid)
+
+        if args.serial:
+            eng = SerialRAGEngine(store, emb, gen, batch_size=4)
+        else:
+            ret_s = BacklogScheduler(max_batch=16)
+            gen_s = BacklogScheduler(max_batch=8)
+            eng = RagdollEngine(store, emb, gen, ret_s, gen_s,
+                                initial_partitions=args.resident)
+        eng.start()
+        rng = random.Random(args.seed)
+        t0 = time.perf_counter()
+        for i in range(args.requests):
+            time.sleep(rng.expovariate(args.rate / 60.0))
+            eng.submit(Request(rid=i, query=f"question about fact {i}",
+                               arrival=time.perf_counter()))
+        reqs = eng.drain(args.requests, timeout=300)
+        eng.stop()
+
+    tab = latency_table(reqs)
+    print(f"\nmode={'serial' if args.serial else 'ragdoll'} "
+          f"arch={args.arch}")
+    for k, v in tab.items():
+        print(f"  {k:16s} {v:10.3f}" if isinstance(v, float)
+              else f"  {k:16s} {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+# Facade exports resolved lazily to avoid import cycles during bring-up.
+
+
+def __getattr__(name):
+    if name in ("Model", "build_model", "input_specs", "make_cache_specs"):
+        from repro.models import model as _m
+        return getattr(_m, name)
+    raise AttributeError(name)

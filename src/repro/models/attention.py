@@ -1,0 +1,281 @@
+"""Attention mixers: GQA/MQA/MHA, sliding-window local, and MLA.
+
+Three execution modes share one parameter set:
+  * ``train``   — full-sequence causal, no cache;
+  * ``prefill`` — full-sequence causal, writes the KV cache (padded to
+    ``cache_len``), returns (out, cache);
+  * ``decode``  — one token per sequence against the cache at per-sequence
+    positions ``pos`` (continuous batching: positions may differ per row).
+
+MLA (DeepSeek-V2) caches the compressed latent (kv_lora + rope key) and uses
+the *absorbed* formulation at decode time: q_nope is folded through W_uk so
+scores are taken directly against the latent — the cache stays (S, r + rd)
+per sequence instead of (S, H, 2*hd).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops, ref
+from repro.models import layers
+from repro.sharding.specs import constrain
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, h, kv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": layers.dense_init(ks[0], (d, h, hd), dtype, fan_in=d),
+        "wk": layers.dense_init(ks[1], (d, kv, hd), dtype, fan_in=d),
+        "wv": layers.dense_init(ks[2], (d, kv, hd), dtype, fan_in=d),
+        "wo": layers.dense_init(ks[3], (h, hd, d), dtype, fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_dkv": layers.dense_init(ks[0], (d, m.kv_lora_rank), dtype),
+        "w_krope": layers.dense_init(ks[1], (d, m.qk_rope_head_dim), dtype),
+        "norm_kv": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_uk": layers.dense_init(ks[2], (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                                  dtype, fan_in=m.kv_lora_rank),
+        "w_uv": layers.dense_init(ks[3], (m.kv_lora_rank, h, m.v_head_dim),
+                                  dtype, fan_in=m.kv_lora_rank),
+        "wo": layers.dense_init(ks[4], (h, m.v_head_dim, d),
+                                dtype, fan_in=h * m.v_head_dim),
+        "wq": layers.dense_init(ks[5], (d, h, m.qk_head_dim), dtype, fan_in=d),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# GQA forward
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, x, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def attention_forward(
+    p, x: jnp.ndarray, cfg: ModelConfig, *,
+    mixer: str,                      # "attn" | "local"
+    mode: str,                       # "train" | "prefill" | "decode"
+    cache: Optional[dict] = None,    # {"k","v"} (B, S_cache, KV, hd)
+    pos: Optional[jnp.ndarray] = None,   # (B,) current position (decode)
+    use_rope: bool = True,
+    causal: bool = True,
+    ctx=None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d_model = x.shape
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    window = cfg.sliding_window if mixer == "local" else None
+    rot = int(hd * cfg.rope_fraction)
+
+    q, k, v = _project_qkv(p, x, cfg)
+
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(s)
+        if use_rope:
+            cos, sin = layers.rope_cos_sin(positions, rot, cfg.rope_theta)
+            cos, sin = cos[None, :, None], sin[None, :, None]
+            q = layers.apply_rope(q, cos, sin, rot)
+            k = layers.apply_rope(k, cos, sin, rot)
+        new_cache = None
+        if mode == "prefill":
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            new_cache = {"k": kc, "v": vc}
+        # GQA under TP: when kv heads don't divide the model axis but q
+        # heads do, pre-repeat KV so ALL attention tensors shard over the
+        # head dim — otherwise GSPMD replicates attention across the model
+        # axis (16x wasted FLOPs + per-block gathers; see EXPERIMENTS
+        # section Perf).  The repetition itself is free under sharding.
+        if (ctx is not None and h != kvh and h % ctx.tp_size == 0
+                and kvh % ctx.tp_size != 0):
+            k = ref.repeat_kv(k, h)
+            v = ref.repeat_kv(v, h)
+            q = constrain(q, ctx, "batch", None, "model", None)
+            k = constrain(k, ctx, "batch", None, "model", None)
+            v = constrain(v, ctx, "batch", None, "model", None)
+        out = ops.flash_attention(
+            q, k, v, causal=causal, window=window,
+            softcap=cfg.attn_logit_softcap)
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        return out, new_cache
+
+    # decode: x is (B, 1, D); pos (B,)
+    assert mode == "decode" and cache is not None and pos is not None
+    if use_rope:
+        cos, sin = layers.rope_cos_sin(pos, rot, cfg.rope_theta)  # (B, rot/2)
+        cos, sin = cos[:, None, None], sin[:, None, None]
+        q = layers.apply_rope(q, cos, sin, rot)
+        k = layers.apply_rope(k, cos, sin, rot)
+    # scatter new k/v at per-row positions
+    kc = _row_update(cache["k"], k.astype(cache["k"].dtype), pos)
+    vc = _row_update(cache["v"], v.astype(cache["v"].dtype), pos)
+    kv_len = pos + 1
+    out = ops.decode_attention(
+        q[:, 0], kc, vc, kv_len, window=window,
+        softcap=cfg.attn_logit_softcap)
+    out = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+    return out, {"k": kc, "v": vc}
+
+
+def _row_update(cache: jnp.ndarray, new: jnp.ndarray,
+                pos: jnp.ndarray) -> jnp.ndarray:
+    """cache (B, S, ...), new (B, 1, ...), pos (B,) -> per-row dynamic update."""
+    def upd(c, n, p):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+    return jax.vmap(upd)(cache, new, pos)
+
+
+# ---------------------------------------------------------------------------
+# MLA forward
+# ---------------------------------------------------------------------------
+
+def mla_forward(
+    p, x: jnp.ndarray, cfg: ModelConfig, *,
+    mode: str,
+    cache: Optional[dict] = None,    # {"ckv" (B,S,r), "krope" (B,S,rd)}
+    pos: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rd, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    scale = m.qk_head_dim ** -0.5
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])        # (B,S,H, nope+rd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    ckv = layers.rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]),
+                          p["norm_kv"], cfg.norm_eps)   # (B,S,r)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_krope"])  # (B,S,rd) shared head
+
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(s)
+        cos, sin = layers.rope_cos_sin(positions, rd, cfg.rope_theta)
+        q_rope = layers.apply_rope(q_rope, cos[None, :, None],
+                                   sin[None, :, None])
+        k_rope = layers.apply_rope(k_rope[:, :, None], cos[None, :, None],
+                                   sin[None, :, None])[:, :, 0]
+        # expand latent to per-head K/V (standard formulation)
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"])
+        v = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, h, rd))],
+            axis=-1)
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = ops.flash_attention(qfull, k, v, causal=True, scale=scale)
+        new_cache = None
+        if mode == "prefill":
+            c1 = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1)
+            c2 = jax.lax.dynamic_update_slice_in_dim(
+                cache["krope"], k_rope.astype(cache["krope"].dtype), 0, axis=1)
+            new_cache = {"ckv": c1, "krope": c2}
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+    # ---- decode with the absorbed formulation ----
+    assert cache is not None and pos is not None
+    cos, sin = layers.rope_cos_sin(pos, rd, cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, cos[:, None, None], sin[:, None, None])
+    k_rope = layers.apply_rope(k_rope[:, :, None], cos[:, None, None],
+                               sin[:, None, None])[:, :, 0]
+    ckv_c = _row_update(cache["ckv"], ckv.astype(cache["ckv"].dtype), pos)
+    kr_c = _row_update(cache["krope"], k_rope.astype(cache["krope"].dtype), pos)
+    kv_len = pos + 1
+    s_cache = ckv_c.shape[1]
+
+    # absorb: q_eff[h] = q_nope[h] @ W_uk[:, h, :]^T  -> scores vs latent
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["w_uk"])   # (B,H,r)
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                       ckv_c.astype(jnp.float32))
+    s_rope = jnp.einsum("bhk,bsk->bhs", q_rope[:, 0].astype(jnp.float32),
+                        kr_c.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    mask = jnp.arange(s_cache)[None, :] < kv_len[:, None]
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs,
+                     ckv_c.astype(jnp.float32))          # (B,H,r) latent ctx
+    out = jnp.einsum("bhr,rhk->bhk", ctx.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+    return out, {"ckv": ckv_c, "krope": kr_c}
+
+
+def cross_attention_forward(
+    p, x: jnp.ndarray, cfg: ModelConfig, *,
+    mode: str,
+    enc_out: Optional[jnp.ndarray] = None,   # (B, S_enc, D)
+    cache: Optional[dict] = None,            # {"ck","cv"} (B, S_enc, KV, hd)
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Encoder-decoder cross attention (no RoPE, never causal).
+
+    train/prefill: project enc_out to K/V (prefill caches them);
+    decode: attend over the cached cross K/V.
+    """
+    b = x.shape[0]
+    if mode in ("train", "prefill"):
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+        out = ops.flash_attention(q, k, v, causal=False)
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"ck": k.astype(x.dtype), "cv": v.astype(x.dtype)}
+        return out, new_cache
+    # decode: full-length cross cache
+    assert cache is not None
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    s_enc = cache["ck"].shape[1]
+    kv_len = jnp.full((b,), s_enc, jnp.int32)
+    out = ops.decode_attention(q[:, 0], cache["ck"], cache["cv"], kv_len)
+    out = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+    return out, {"ck": cache["ck"], "cv": cache["cv"]}
+
+
+def make_attn_cache_spec(cfg: ModelConfig, mixer: str, batch: int,
+                         cache_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the per-layer cache for this mixer kind."""
+    if mixer == "mla":
+        m = cfg.mla
+        return {
+            "ckv": jax.ShapeDtypeStruct((batch, cache_len, m.kv_lora_rank),
+                                        dtype),
+            "krope": jax.ShapeDtypeStruct((batch, cache_len,
+                                           m.qk_rope_head_dim), dtype),
+        }
+    hd = cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    return {
+        "k": jax.ShapeDtypeStruct((batch, cache_len, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, cache_len, kv, hd), dtype),
+    }

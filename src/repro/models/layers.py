@@ -1,0 +1,94 @@
+"""Shared neural-net building blocks: init, norms, RoPE, MLPs, softcap."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    return ops.rmsnorm(x, w, eps)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (supports partial rotary — chatglm's "2d" rope applies to half dims)
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jnp.ndarray, rot_dim: int,
+                 theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,) -> cos/sin (..., rot_dim/2), f32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                             / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               rot_dim: Optional[int] = None) -> jnp.ndarray:
+    """x (..., S, H, D); cos/sin broadcastable (..., S, 1, rot/2)."""
+    d = x.shape[-1]
+    rot = rot_dim if rot_dim is not None else d
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = x1f * cos - x2f * sin
+    o2 = x2f * cos + x1f * sin
+    out = jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+    if rot < d:
+        out = jnp.concatenate([out, xp], axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype, fan_in=d_ff),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def apply_mlp(params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        g = jax.nn.silu(x @ params["w_gate"])
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    if kind == "geglu":
+        g = jax.nn.gelu(x @ params["w_gate"], approximate=True)
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    return jax.nn.gelu(x @ params["w_up"], approximate=True) @ params["w_down"]
+
+
+def mlp_flops(d_model: int, d_ff: int, kind: str, tokens: int) -> int:
+    n_mat = 3 if kind in ("swiglu", "geglu") else 2
+    return 2 * n_mat * d_model * d_ff * tokens

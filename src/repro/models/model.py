@@ -1,0 +1,166 @@
+"""Model facade: init / train / prefill / decode + ShapeDtypeStruct specs.
+
+``input_specs(cfg, shape)`` provides the dry-run stand-ins for every model
+input (weak-type-correct, shardable, no device allocation), per the assigned
+(architecture x input-shape) grid.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import attention, ssm, transformer
+from repro.sharding.specs import MeshContext, constrain
+
+
+def _stack_specs(spec_tree, reps: int):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((reps,) + s.shape, s.dtype), spec_tree)
+
+
+def _layer_cache_spec(cfg: ModelConfig, mixer: str, batch: int,
+                      cache_len: int, dtype, enc_len: Optional[int]):
+    if mixer == "mamba":
+        spec = ssm.make_mamba_cache_spec(cfg, batch, dtype)
+    else:
+        spec = attention.make_attn_cache_spec(cfg, mixer, batch, cache_len,
+                                              dtype)
+    if cfg.encdec and enc_len is not None:
+        hd = cfg.resolved_head_dim
+        kv = cfg.num_kv_heads
+        spec = dict(spec)
+        spec["ck"] = jax.ShapeDtypeStruct((batch, enc_len, kv, hd), dtype)
+        spec["cv"] = jax.ShapeDtypeStruct((batch, enc_len, kv, hd), dtype)
+    return spec
+
+
+def make_cache_specs(cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype=jnp.bfloat16, enc_len: Optional[int] = None):
+    """Cache pytree of ShapeDtypeStructs (blocks stacked over repeats)."""
+    reps = transformer.scanned_repeats(cfg)
+    cache: Dict[str, Any] = {
+        "blocks": [
+            _stack_specs(_layer_cache_spec(cfg, kind[0], batch, cache_len,
+                                           dtype, enc_len), reps)
+            for kind in cfg.layer_pattern]
+    }
+    if cfg.first_k_dense:
+        kinds = cfg.layer_kinds()
+        cache["prefix"] = [
+            _layer_cache_spec(cfg, kinds[i][0], batch, cache_len, dtype,
+                              enc_len)
+            for i in range(cfg.first_k_dense)]
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16, enc_len: Optional[int] = None):
+    specs = make_cache_specs(cfg, batch, cache_len, dtype, enc_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+# ---------------------------------------------------------------------------
+# input specs per assigned shape
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the step function.
+
+    train  -> kwargs of ``train_step``: inputs, labels (+ enc_embeds)
+    prefill-> kwargs of ``prefill_step``: inputs, cache (+ enc_embeds)
+    decode -> kwargs of ``decode_step``: inputs, cache, pos
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    dec_len = max(int(s * cfg.dec_len_ratio), 16) if cfg.encdec else s
+
+    def tok_or_embed(n):
+        if cfg.frontend == "embed" and not cfg.encdec:
+            return jax.ShapeDtypeStruct((b, n, cfg.d_model), dtype)
+        return jax.ShapeDtypeStruct((b, n), tok)
+
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["inputs"] = tok_or_embed(dec_len)
+        out["labels"] = jax.ShapeDtypeStruct((b, dec_len), tok)
+        if cfg.encdec:
+            out["enc_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                     dtype)
+    elif shape.kind == "prefill":
+        out["inputs"] = tok_or_embed(dec_len)
+        out["cache"] = make_cache_specs(
+            cfg, b, dec_len, dtype, enc_len=s if cfg.encdec else None)
+        if cfg.encdec:
+            out["enc_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                     dtype)
+    elif shape.kind == "decode":
+        out["inputs"] = tok_or_embed(1)
+        cache_len = dec_len if cfg.encdec else s
+        out["cache"] = make_cache_specs(
+            cfg, b, cache_len, dtype, enc_len=s if cfg.encdec else None)
+        out["pos"] = jax.ShapeDtypeStruct((b,), tok)
+    else:
+        raise ValueError(shape.kind)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    ctx: Optional[MeshContext] = None
+    moe_strategy: str = "tp"
+    remat: bool = True
+
+    def init(self, key, dtype=jnp.bfloat16):
+        return transformer.init_params(self.cfg, key, dtype)
+
+    def param_specs(self, dtype=jnp.bfloat16):
+        return jax.eval_shape(
+            lambda: transformer.init_params(self.cfg, jax.random.PRNGKey(0),
+                                            dtype))
+
+    # ---- training ----
+    def apply_train(self, params, inputs, enc_embeds=None):
+        return transformer.forward(
+            params, self.cfg, inputs, ctx=self.ctx,
+            moe_strategy=self.moe_strategy, remat=self.remat,
+            enc_embeds=enc_embeds)
+
+    def loss_fn(self, params, batch: Dict[str, jnp.ndarray]
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux = self.apply_train(params, batch["inputs"],
+                                       batch.get("enc_embeds"))
+        labels = batch["labels"]
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        onehot = jax.nn.one_hot(labels, self.cfg.vocab_size, dtype=lf.dtype)
+        ll = jnp.sum(lf * onehot, axis=-1)
+        xent = jnp.mean(lse - ll)
+        loss = xent + aux
+        return loss, {"xent": xent, "aux": aux}
+
+    # ---- serving ----
+    def prefill(self, params, inputs, cache, enc_embeds=None):
+        return transformer.prefill(
+            params, self.cfg, inputs, cache, ctx=self.ctx,
+            moe_strategy=self.moe_strategy, enc_embeds=enc_embeds)
+
+    def decode(self, params, inputs, cache, pos):
+        return transformer.decode_step(
+            params, self.cfg, inputs, cache, pos, ctx=self.ctx,
+            moe_strategy=self.moe_strategy)
+
+
+def build_model(cfg: ModelConfig, ctx: Optional[MeshContext] = None,
+                **kw) -> Model:
+    return Model(cfg=cfg, ctx=ctx, **kw)

@@ -1,0 +1,240 @@
+"""Mamba2 blocks via SSD (state-space duality, arXiv:2405.21060).
+
+Training/prefill use the chunked SSD algorithm: quadratic attention-like
+matmuls *within* a chunk (MXU-friendly), linear recurrence *across* chunks
+(a ``lax.scan`` carrying the (H, P, N) state).  Decode is the O(1) step
+recurrence.  The recurrent state is the RAG-serving analogue of the KV
+cache: constant in sequence length, which is exactly why the long_500k
+shape runs on the SSM/hybrid archs.
+
+Sharding: heads shard over ``model`` (all SSD einsums are head-local);
+the depthwise conv is computed as k shifted adds so the channel sharding
+is preserved without halo exchanges.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    gn2 = 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": layers.dense_init(ks[0], (d, di), dtype),
+        "in_x": layers.dense_init(ks[1], (d, di), dtype),
+        "in_bc": layers.dense_init(ks[2], (d, gn2), dtype),
+        "in_dt": layers.dense_init(ks[3], (d, nh), dtype),
+        "conv_x_w": layers.dense_init(ks[4], (di, s.d_conv), dtype,
+                                      fan_in=s.d_conv),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": layers.dense_init(ks[5], (gn2, s.d_conv), dtype,
+                                       fan_in=s.d_conv),
+        "conv_bc_b": jnp.zeros((gn2,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(A_log)
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),   # softplus ~ 0.12
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": layers.dense_init(ks[6], (di, d), dtype, fan_in=di),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv as k shifted adds (sharding-preserving).
+
+    x (B, S, C); w (C, k); init_state (B, k-1, C) history or None (zeros).
+    """
+    bsz, s, c = x.shape
+    k = w.shape[1]
+    hist = init_state if init_state is not None else \
+        jnp.zeros((bsz, k - 1, c), x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)            # (B, S+k-1, C)
+    out = jnp.zeros((bsz, s, c), jnp.float32)
+    for j in range(k):
+        out = out + xp[:, j:j + s].astype(jnp.float32) * w[:, j].astype(
+            jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment sums: a (..., Q) -> (..., Q, Q) with [i,j] = sum(j+1..i)."""
+    q = a.shape[-1]
+    x = jnp.repeat(a[..., None], q, axis=-1)           # x[..., i, j] = a_i
+    mask = jnp.tril(jnp.ones((q, q), bool), k=-1)      # keep j < i
+    x = jnp.where(mask, x, 0.0)
+    x = jnp.cumsum(x, axis=-2)                         # sum_{k=j+1..i} a_k
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, x, NEG_INF)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (B, S, H, P) — values (NOT yet dt-scaled)
+    dt: jnp.ndarray,     # (B, S, H) f32, post-softplus
+    a: jnp.ndarray,      # (H,) f32 negative decay
+    b_: jnp.ndarray,     # (B, S, G, N)
+    c_: jnp.ndarray,     # (B, S, G, N)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,   # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    g, n = b_.shape[2], b_.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.reshape(bsz, nc, chunk, h)
+    bf = b_.astype(jnp.float32).reshape(bsz, nc, chunk, g, n)
+    cf = c_.astype(jnp.float32).reshape(bsz, nc, chunk, g, n)
+    # broadcast groups to heads: (B, nc, Q, G, N) -> (B, nc, Q, H, N)
+    bh = jnp.repeat(bf, rep, axis=3)
+    ch = jnp.repeat(cf, rep, axis=3)
+
+    adt = dtf * a[None, None, None, :]                   # (B,nc,Q,H) log decay
+    xdt = xf * dtf[..., None]
+    acum = jnp.cumsum(adt, axis=2)                       # (B,nc,Q,H)
+
+    # ---- intra-chunk (quadratic, MXU) ----
+    lmat = jnp.exp(_segsum(jnp.moveaxis(adt, -1, 2)))    # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", ch, bh)    # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchqs,bchqs,bcshp->bcqhp", scores, lmat, xdt)
+
+    # ---- chunk states ----
+    decay_states = jnp.exp(acum[:, :, -1:, :] - acum)    # (B,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", bh, decay_states, xdt)
+
+    # ---- inter-chunk recurrence (scan) ----
+    chunk_decay = jnp.exp(acum[:, :, -1, :])             # (B,nc,H)
+    st0 = init_state.astype(jnp.float32) if init_state is not None else \
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(carry, xs):
+        st_in = carry
+        st_c, dec = xs                                   # (B,H,P,N), (B,H)
+        st_out = st_in * dec[..., None, None] + st_c
+        return st_out, st_in                             # emit state BEFORE
+
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    final_state, prev_states = jax.lax.scan(step, st0, xs)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution ----
+    state_decay = jnp.exp(acum)                          # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", ch, prev_states,
+                       state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def ssd_step(
+    x: jnp.ndarray,      # (B, H, P)
+    dt: jnp.ndarray,     # (B, H) f32
+    a: jnp.ndarray,      # (H,)
+    b_: jnp.ndarray,     # (B, G, N)
+    c_: jnp.ndarray,     # (B, G, N)
+    state: jnp.ndarray,  # (B, H, P, N) f32
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrence: O(1) in sequence length."""
+    h = x.shape[1]
+    g = b_.shape[1]
+    rep = h // g
+    bh = jnp.repeat(b_.astype(jnp.float32), rep, axis=1)     # (B,H,N)
+    ch = jnp.repeat(c_.astype(jnp.float32), rep, axis=1)
+    da = jnp.exp(dt * a[None, :])                            # (B,H)
+    xdt = x.astype(jnp.float32) * dt[..., None]              # (B,H,P)
+    new_state = state * da[..., None, None] + \
+        jnp.einsum("bhp,bhn->bhpn", xdt, bh)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch)
+    return y, new_state
+
+
+def mamba_forward(
+    p, x: jnp.ndarray, cfg: ModelConfig, *,
+    mode: str,
+    cache: Optional[dict] = None,   # {"conv" (B,k-1,C), "state" (B,H,P,N)}
+    pos: Optional[jnp.ndarray] = None,   # unused (no positional encoding)
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    s_cfg = cfg.ssm
+    bsz, s, d = x.shape
+    di = s_cfg.d_inner(cfg.d_model)
+    nh = s_cfg.num_heads(cfg.d_model)
+    hd = s_cfg.head_dim
+    g, n = s_cfg.n_groups, s_cfg.d_state
+
+    z = x @ p["in_z"]                                    # (B,S,di)
+    xr = x @ p["in_x"]
+    bc = x @ p["in_bc"]                                  # (B,S,2GN)
+    dt_raw = (x @ p["in_dt"]).astype(jnp.float32)        # (B,S,nh)
+    a = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+
+    if mode in ("train", "prefill"):
+        conv_in_x, conv_in_bc = xr, bc
+        xr = _causal_conv(xr, p["conv_x_w"], p["conv_x_b"])
+        bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+        bmat, cmat = jnp.split(bc, 2, axis=-1)
+        bmat = bmat.reshape(bsz, s, g, n)
+        cmat = cmat.reshape(bsz, s, g, n)
+        xh = xr.reshape(bsz, s, nh, hd)
+        y, final_state = ssd_chunked(xh, dt, a, bmat, cmat,
+                                     min(s_cfg.chunk_size, s))
+        y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+        new_cache = None
+        if mode == "prefill":
+            k = s_cfg.d_conv
+            hist = jnp.concatenate([conv_in_x, conv_in_bc], axis=-1)
+            conv_cache = hist[:, s - (k - 1):, :] if s >= k - 1 else \
+                jnp.pad(hist, ((0, 0), (k - 1 - s, 0), (0, 0)))
+            new_cache = {"conv": conv_cache.astype(x.dtype),
+                         "state": final_state.astype(jnp.float32)}
+    else:
+        assert cache is not None
+        k = s_cfg.d_conv
+        conv_hist = cache["conv"]                        # (B, k-1, di+2GN)
+        cur = jnp.concatenate([xr, bc], axis=-1)         # (B, 1, C)
+        hist_x = conv_hist[..., :di]
+        hist_bc = conv_hist[..., di:]
+        xr = _causal_conv(xr, p["conv_x_w"], p["conv_x_b"], hist_x)
+        bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], hist_bc)
+        new_conv = jnp.concatenate([conv_hist, cur], axis=1)[:, 1:]
+        bmat, cmat = jnp.split(bc[:, 0], 2, axis=-1)
+        xh = xr[:, 0].reshape(bsz, nh, hd)
+        y, new_state = ssd_step(xh, dt[:, 0], a,
+                                bmat.reshape(bsz, g, n),
+                                cmat.reshape(bsz, g, n),
+                                cache["state"])
+        y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+        y = y[:, None]                                   # (B,1,nh,hd)
+        new_cache = {"conv": new_conv.astype(x.dtype),
+                     "state": new_state}
+
+    yd = y.reshape(bsz, -1, di).astype(x.dtype)
+    gated = yd * jax.nn.silu(z)
+    out = layers.rms_norm(gated, p["gate_norm"], cfg.norm_eps)
+    return out @ p["out_proj"], new_cache
+
+
+def make_mamba_cache_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    c = di + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, c), dtype),
+        "state": jax.ShapeDtypeStruct((batch, nh, s.head_dim, s.d_state),
+                                      jnp.float32),
+    }

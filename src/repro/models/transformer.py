@@ -1,0 +1,353 @@
+"""Unified transformer: dense / MoE / MLA / SSM / hybrid / enc-dec.
+
+Depth is expressed as ``scan`` over repeats of the config's
+``layer_pattern`` (params stacked on a leading repeats axis), so the HLO —
+and therefore multi-pod compile time — is O(pattern length), not O(depth).
+Heterogeneous stacks (gemma2 local/global, jamba 1:7+MoE) unroll the
+pattern *inside* the scan body.
+
+Three entry points share parameters: ``forward`` (train), ``prefill``
+(train-shaped attention + cache write), ``decode_step`` (one token against
+the caches at per-sequence positions — continuous batching ready).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerKind, ModelConfig
+from repro.models import attention, layers, moe, ssm
+from repro.sharding.specs import MeshContext, constrain
+
+Params = Dict[str, Any]
+
+# Megatron-style sequence-parallel activations between blocks.
+# "auto" (measured, EXPERIMENTS.md section Perf): ON for every family
+# EXCEPT MLA archs — the latent->per-head expansion einsums reshard
+# (seq x heads) every layer, tripling all three roofline terms on
+# deepseek-v2-lite train_4k (t_coll 18.4s -> 2.6s with it off).
+SEQ_SHARD_ACTIVATIONS = "auto"
+
+
+def _seq_shard(cfg) -> bool:
+    if SEQ_SHARD_ACTIVATIONS == "auto":
+        return cfg.mla is None
+    return bool(SEQ_SHARD_ACTIVATIONS)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, kind: LayerKind, dtype,
+               dense_d_ff: Optional[int] = None, with_cross: bool = False):
+    mixer, ffn = kind
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if mixer in ("attn", "local"):
+        p["attn"] = attention.init_attention(ks[0], cfg, dtype)
+    elif mixer == "mla":
+        p["mla"] = attention.init_mla(ks[0], cfg, dtype)
+    elif mixer == "mamba":
+        p["mamba"] = ssm.init_mamba(ks[0], cfg, dtype)
+    else:
+        raise ValueError(mixer)
+    if with_cross:
+        p["norm_cross"] = jnp.ones((cfg.d_model,), dtype)
+        p["cross"] = attention.init_attention(ks[2], cfg, dtype)
+    if ffn == "dense":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["ffn"] = layers.init_mlp(ks[1], cfg.d_model,
+                                   dense_d_ff or cfg.d_ff, cfg.mlp_kind, dtype)
+    elif ffn == "moe":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["moe"] = moe.init_moe(ks[1], cfg, dtype)
+    return p
+
+
+def _init_stacked(key, cfg, kind, repeats, dtype, with_cross=False):
+    keys = jax.random.split(key, repeats)
+    return jax.vmap(
+        lambda k: init_layer(k, cfg, kind, dtype, with_cross=with_cross)
+    )(keys)
+
+
+def scanned_repeats(cfg: ModelConfig) -> int:
+    n = cfg.num_layers - cfg.first_k_dense
+    assert n % len(cfg.layer_pattern) == 0, (cfg.name, n)
+    return n // len(cfg.layer_pattern)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {}
+    needs_embed = cfg.frontend == "token" or cfg.encdec
+    if needs_embed:
+        p["embed"] = layers.embed_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                                       dtype)
+    if cfg.first_k_dense:
+        p["prefix"] = [
+            init_layer(jax.random.fold_in(ks[1], i), cfg,
+                       (cfg.layer_pattern[i % len(cfg.layer_pattern)][0],
+                        "dense"),
+                       dtype, dense_d_ff=cfg.first_dense_d_ff or cfg.d_ff)
+            for i in range(cfg.first_k_dense)]
+    reps = scanned_repeats(cfg)
+    p["blocks"] = [
+        _init_stacked(jax.random.fold_in(ks[2], j), cfg, kind, reps, dtype,
+                      with_cross=cfg.encdec)
+        for j, kind in enumerate(cfg.layer_pattern)]
+    p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(ks[3],
+                                         (cfg.d_model, cfg.vocab_size), dtype)
+    if cfg.encdec:
+        assert cfg.num_encoder_layers % len(cfg.layer_pattern) == 0
+        enc_reps = cfg.num_encoder_layers // len(cfg.layer_pattern)
+        p["encoder"] = {
+            "blocks": [
+                _init_stacked(jax.random.fold_in(ks[4], j), cfg, kind,
+                              enc_reps, dtype)
+                for j, kind in enumerate(cfg.layer_pattern)],
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# single layer application
+# ---------------------------------------------------------------------------
+
+def apply_layer(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, kind: LayerKind, *,
+    mode: str, cache: Optional[dict], pos, ctx: Optional[MeshContext],
+    moe_strategy: str, causal: bool = True,
+    enc_out: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    mixer, ffn = kind
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = dict(cache) if cache is not None else None
+
+    h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mixer in ("attn", "local"):
+        sub = {k: cache[k] for k in ("k", "v")} if cache is not None else None
+        out, nc = attention.attention_forward(
+            p["attn"], h, cfg, mixer=mixer, mode=mode, cache=sub, pos=pos,
+            causal=causal, ctx=ctx)
+        if nc is not None:
+            new_cache.update(nc)
+    elif mixer == "mla":
+        sub = ({k: cache[k] for k in ("ckv", "krope")}
+               if cache is not None else None)
+        out, nc = attention.mla_forward(p["mla"], h, cfg, mode=mode,
+                                        cache=sub, pos=pos)
+        if nc is not None:
+            new_cache.update(nc)
+    elif mixer == "mamba":
+        sub = ({k: cache[k] for k in ("conv", "state")}
+               if cache is not None else None)
+        out, nc = ssm.mamba_forward(p["mamba"], h, cfg, mode=mode,
+                                    cache=sub, pos=pos)
+        if nc is not None:
+            new_cache.update(nc)
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    seq_ax = "seq" if (_seq_shard(cfg)
+                       and mode in ("train", "prefill")
+                       and ctx is not None
+                       and x.shape[1] % ctx.tp_size == 0) else None
+    x = constrain(x, ctx, "batch", seq_ax, None)
+
+    has_cross_cache = cache is not None and "ck" in cache
+    if "cross" in p and (enc_out is not None or has_cross_cache):
+        hc = layers.rms_norm(x, p["norm_cross"], cfg.norm_eps)
+        sub = ({k: cache[k] for k in ("ck", "cv")}
+               if has_cross_cache else None)
+        out, nc = attention.cross_attention_forward(
+            p["cross"], hc, cfg, enc_out=enc_out, mode=mode, cache=sub)
+        if nc is not None:
+            new_cache.update(nc)
+        x = x + out
+
+    if ffn != "none":
+        h2 = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if ffn == "dense":
+            x = x + layers.apply_mlp(p["ffn"], h2, cfg.mlp_kind)
+        else:
+            if ctx is not None and moe_strategy == "ep":
+                out, aux = moe.moe_forward_ep(p["moe"], h2, cfg, ctx)
+            else:
+                out, aux = moe.moe_forward(p["moe"], h2, cfg, ctx)
+            x = x + out
+        x = constrain(x, ctx, "batch", seq_ax, None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _run_stack(
+    blocks: List[Params], cfg: ModelConfig, x: jnp.ndarray, *,
+    mode: str, caches: Optional[List[dict]], pos,
+    ctx: Optional[MeshContext], moe_strategy: str, causal: bool,
+    enc_out: Optional[jnp.ndarray], remat: bool = False,
+) -> Tuple[jnp.ndarray, Optional[List[dict]], jnp.ndarray]:
+    pattern = cfg.layer_pattern
+    with_cache = caches is not None
+
+    def body(carry, xs):
+        xc, auxc = carry
+        params_list = xs[0]
+        cache_list = xs[1] if with_cache else [None] * len(pattern)
+        new_caches = []
+        for j, kind in enumerate(pattern):
+            xc, nc, a = apply_layer(
+                params_list[j], xc, cfg, kind, mode=mode,
+                cache=cache_list[j], pos=pos, ctx=ctx,
+                moe_strategy=moe_strategy, causal=causal, enc_out=enc_out)
+            new_caches.append(nc if nc is not None else {})
+            auxc = auxc + a
+        ys = tuple(new_caches) if with_cache else None
+        return (xc, auxc), ys
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+
+    xs = (tuple(blocks),) + ((tuple(caches),) if with_cache else ())
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    new_caches = list(ys) if with_cache else None
+    return x, new_caches, aux
+
+
+def _embed_inputs(p, cfg: ModelConfig, inputs: jnp.ndarray) -> jnp.ndarray:
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        x = jnp.take(p["embed"], inputs, axis=0)
+    else:
+        x = inputs  # stub frontend: precomputed embeddings
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(p, cfg: ModelConfig, x: jnp.ndarray,
+            ctx: Optional[MeshContext]) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"])
+    logits = layers.softcap(logits, cfg.final_logit_softcap)
+    return constrain(logits, ctx, "batch", None, "model")
+
+
+def encode(p, cfg: ModelConfig, enc_embeds: jnp.ndarray,
+           ctx: Optional[MeshContext], remat: bool = False) -> jnp.ndarray:
+    """Bidirectional encoder stack (enc-dec archs)."""
+    enc = p["encoder"]
+    x = _embed_inputs(p, cfg, enc_embeds)
+    x, _, _ = _run_stack(enc["blocks"], cfg, x, mode="train", caches=None,
+                         pos=None, ctx=ctx, moe_strategy="tp", causal=False,
+                         enc_out=None, remat=remat)
+    return layers.rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# public passes
+# ---------------------------------------------------------------------------
+
+def forward(
+    p: Params, cfg: ModelConfig, inputs: jnp.ndarray, *,
+    ctx: Optional[MeshContext] = None, moe_strategy: str = "tp",
+    remat: bool = False, enc_embeds: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward. Returns (logits (B,S,V), aux_loss)."""
+    enc_out = None
+    if cfg.encdec:
+        enc_out = encode(p, cfg, enc_embeds, ctx, remat=remat)
+    x = _embed_inputs(p, cfg, inputs)
+    x = constrain(x, ctx, "batch", None, None)
+    aux = jnp.zeros((), jnp.float32)
+    kinds = cfg.layer_kinds()
+    for i, lp in enumerate(p.get("prefix", [])):
+        x, _, a = apply_layer(lp, x, cfg, (kinds[i][0], "dense"), mode="train",
+                              cache=None, pos=None, ctx=ctx,
+                              moe_strategy=moe_strategy, enc_out=enc_out)
+        aux = aux + a
+    x, _, a = _run_stack(p["blocks"], cfg, x, mode="train", caches=None,
+                         pos=None, ctx=ctx, moe_strategy=moe_strategy,
+                         causal=True, enc_out=enc_out, remat=remat)
+    aux = aux + a
+    x = layers.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    return unembed(p, cfg, x, ctx), aux
+
+
+def prefill(
+    p: Params, cfg: ModelConfig, inputs: jnp.ndarray, cache: dict, *,
+    ctx: Optional[MeshContext] = None, moe_strategy: str = "tp",
+    enc_embeds: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, dict]:
+    """Prefill: causal pass over the prompt, fills caches.
+
+    Returns (last-position logits (B, V), cache).
+    """
+    enc_out = None
+    if cfg.encdec:
+        enc_out = encode(p, cfg, enc_embeds, ctx)
+    x = _embed_inputs(p, cfg, inputs)
+    x = constrain(x, ctx, "batch", None, None)
+    new_cache: dict = {}
+    if cfg.first_k_dense:
+        new_prefix = []
+        kinds = cfg.layer_kinds()
+        for i, lp in enumerate(p["prefix"]):
+            x, nc, _ = apply_layer(lp, x, cfg, (kinds[i][0], "dense"),
+                                   mode="prefill", cache=cache["prefix"][i],
+                                   pos=None, ctx=ctx,
+                                   moe_strategy=moe_strategy, enc_out=enc_out)
+            new_prefix.append(nc)
+        new_cache["prefix"] = new_prefix
+    x, blocks_cache, _ = _run_stack(
+        p["blocks"], cfg, x, mode="prefill", caches=cache["blocks"],
+        pos=None, ctx=ctx, moe_strategy=moe_strategy, causal=True,
+        enc_out=enc_out)
+    new_cache["blocks"] = blocks_cache
+    x = layers.rms_norm(x[:, -1:], p["final_norm"], cfg.norm_eps)
+    logits = unembed(p, cfg, x, ctx)[:, 0]
+    return logits, new_cache
+
+
+def decode_step(
+    p: Params, cfg: ModelConfig, inputs: jnp.ndarray, cache: dict,
+    pos: jnp.ndarray, *,
+    ctx: Optional[MeshContext] = None, moe_strategy: str = "tp",
+) -> Tuple[jnp.ndarray, dict]:
+    """One decode step at per-sequence positions ``pos`` (B,).
+
+    ``inputs``: (B, 1) token ids or (B, 1, D) stub embeddings.
+    Returns (logits (B, V), new cache).
+    """
+    x = _embed_inputs(p, cfg, inputs)
+    x = constrain(x, ctx, "batch", None, None)
+    new_cache: dict = {}
+    if cfg.first_k_dense:
+        new_prefix = []
+        kinds = cfg.layer_kinds()
+        for i, lp in enumerate(p["prefix"]):
+            x, nc, _ = apply_layer(lp, x, cfg, (kinds[i][0], "dense"),
+                                   mode="decode", cache=cache["prefix"][i],
+                                   pos=pos, ctx=ctx, moe_strategy=moe_strategy)
+            new_prefix.append(nc)
+        new_cache["prefix"] = new_prefix
+    x, blocks_cache, _ = _run_stack(
+        p["blocks"], cfg, x, mode="decode", caches=cache["blocks"], pos=pos,
+        ctx=ctx, moe_strategy=moe_strategy, causal=True, enc_out=None)
+    new_cache["blocks"] = blocks_cache
+    x = layers.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = unembed(p, cfg, x, ctx)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,5 @@
+from repro.retrieval.embedding import HashEmbedder
+from repro.retrieval.vectorstore import Partition, VectorStore
+from repro.retrieval.cache import PartitionCache
+
+__all__ = ["HashEmbedder", "Partition", "VectorStore", "PartitionCache"]

@@ -1,0 +1,55 @@
+"""Resident-partition cache manager (the paper's knob ``P``).
+
+Keeps at most ``target`` partitions in RAM with LRU eviction; the target is
+adjusted by the placement optimizer between retrieval batches ("lazy"
+transfer: loads/releases happen at batch boundaries, §5).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Deque, List, Optional
+
+from repro.retrieval.vectorstore import VectorStore
+
+
+class PartitionCache:
+    def __init__(self, store: VectorStore, target: int):
+        self.store = store
+        self.target = max(0, target)
+        self.lru: Deque[int] = collections.deque()
+        for pid in store.resident_set():
+            self.lru.append(pid)
+        self._trim()
+
+    def set_target(self, target: int) -> None:
+        """Adjust resident count (called between batches — lazy transfer)."""
+        self.target = max(0, target)
+        self._trim()
+
+    def _trim(self) -> None:
+        while len(self.lru) > self.target:
+            pid = self.lru.popleft()
+            self.store.release(pid)
+
+    def touch(self, pid: int) -> float:
+        """Ensure pid resident; returns load seconds (0 if hit)."""
+        dt = 0.0
+        if pid in self.lru:
+            self.lru.remove(pid)
+        else:
+            dt = self.store.load(pid)
+            self._make_room()
+        self.lru.append(pid)
+        return dt
+
+    def _make_room(self) -> None:
+        while len(self.lru) >= max(self.target, 1):
+            pid = self.lru.popleft()
+            self.store.release(pid)
+
+    def resident(self) -> List[int]:
+        return list(self.lru)
+
+    def hit_rate_plan(self, pids: List[int]) -> float:
+        hits = sum(1 for p in pids if p in self.lru)
+        return hits / max(len(pids), 1)

@@ -1,0 +1,53 @@
+"""Distributed exact search: partitions sharded over the data axis.
+
+Each device holds a row-shard of the (resident) database, computes a local
+top-k with the retrieval kernel, then an all-gather + merge produces the
+global top-k.  This is the standard sharded-ANN pattern and is what the
+multi-pod deployment uses: the paper's partition-residency knob applies
+*per host*, while cross-host merge costs one (Q, k) all-gather — tiny
+compared to the generation collectives (quantified in benchmarks/roofline).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops
+from repro.sharding.specs import MeshContext
+
+
+def distributed_topk(
+    queries: jnp.ndarray,    # (Q, D) replicated
+    database: jnp.ndarray,   # (N, D) sharded over data axis (rows)
+    k: int,
+    ctx: MeshContext,
+    impl: Optional[str] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (scores (Q,k), global row indices (Q,k))."""
+    axes = ctx.batch_axes
+    n = database.shape[0]
+    shards = ctx.dp_size
+    assert n % shards == 0
+    local_n = n // shards
+
+    def fn(q, db):
+        s, i = ops.retrieval_topk(q, db, k, impl=impl)
+        shard_id = jax.lax.axis_index(axes)
+        gi = i + shard_id * local_n
+        # gather all shards' candidates and merge
+        s_all = jax.lax.all_gather(s, axes, axis=0)      # (S, Q, k)
+        i_all = jax.lax.all_gather(gi, axes, axis=0)
+        s_cat = jnp.moveaxis(s_all, 0, 1).reshape(q.shape[0], -1)
+        i_cat = jnp.moveaxis(i_all, 0, 1).reshape(q.shape[0], -1)
+        top_s, pos = jax.lax.top_k(s_cat, k)
+        top_i = jnp.take_along_axis(i_cat, pos, axis=1)
+        return top_s, top_i
+
+    return jax.shard_map(
+        fn, mesh=ctx.mesh,
+        in_specs=(P(None, None), P(axes, None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False)(queries, database)

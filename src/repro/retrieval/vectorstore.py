@@ -1,0 +1,164 @@
+"""Partitioned vector store with a real disk tier.
+
+Mirrors the paper's Milvus deployment shape: the database is split into P
+partitions; a subset is *resident* in RAM, the rest spilled to disk as
+``.npy`` files.  Searching a resident partition is a kernel call
+(``retrieval_topk``); searching a non-resident partition requires loading
+it first — the load cost is the dominant retrieval cost the paper observes
+("retrieval cost is dominated by partition loading", §4.4), which is why
+the number of resident partitions is one of RAGDoll's placement knobs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels import ops
+
+
+@dataclass
+class Partition:
+    pid: int
+    embeddings: Optional[np.ndarray]      # None when on disk
+    doc_ids: np.ndarray                   # (N,) global chunk ids
+    path: Optional[str] = None            # disk location when spilled
+
+    @property
+    def resident(self) -> bool:
+        return self.embeddings is not None
+
+    @property
+    def nbytes(self) -> int:
+        if self.embeddings is not None:
+            return self.embeddings.nbytes
+        return int(np.load(self.path, mmap_mode="r").nbytes)
+
+
+@dataclass
+class SearchStats:
+    partitions_searched: int = 0
+    partitions_loaded: int = 0
+    load_seconds: float = 0.0
+    search_seconds: float = 0.0
+
+
+class VectorStore:
+    """Exact-search store over hash partitions of the corpus."""
+
+    def __init__(self, dim: int, num_partitions: int,
+                 root: Optional[str] = None):
+        self.dim = dim
+        self.num_partitions = num_partitions
+        self.root = root
+        self.partitions: Dict[int, Partition] = {}
+        self.chunks: List[str] = []           # chunk texts by global id
+
+    # ------------------------------------------------------------- building
+    @classmethod
+    def build(cls, texts: Sequence[str], embedder, num_partitions: int,
+              root: Optional[str] = None) -> "VectorStore":
+        store = cls(embedder.dim, num_partitions, root)
+        store.chunks = list(texts)
+        embs = embedder.embed(texts)
+        ids = np.arange(len(texts))
+        for pid in range(num_partitions):
+            sel = ids % num_partitions == pid
+            store.partitions[pid] = Partition(
+                pid=pid, embeddings=embs[sel], doc_ids=ids[sel])
+        return store
+
+    # ------------------------------------------------------------ disk tier
+    def spill(self, pid: int) -> None:
+        """Move a partition to disk (frees RAM)."""
+        p = self.partitions[pid]
+        if not p.resident:
+            return
+        assert self.root is not None, "need a root dir to spill"
+        os.makedirs(self.root, exist_ok=True)
+        path = os.path.join(self.root, f"part{pid}.npy")
+        if not os.path.exists(path):
+            np.save(path, p.embeddings)
+        p.path = path
+        p.embeddings = None
+
+    def load(self, pid: int) -> float:
+        """Load a partition into RAM; returns wall seconds spent."""
+        p = self.partitions[pid]
+        if p.resident:
+            return 0.0
+        t0 = time.perf_counter()
+        p.embeddings = np.load(p.path)
+        return time.perf_counter() - t0
+
+    def release(self, pid: int) -> None:
+        p = self.partitions[pid]
+        if p.resident and p.path is not None:
+            p.embeddings = None
+        elif p.resident:
+            self.spill(pid)
+
+    def resident_set(self) -> List[int]:
+        return [pid for pid, p in self.partitions.items() if p.resident]
+
+    def resident_bytes(self) -> int:
+        return sum(p.embeddings.nbytes for p in self.partitions.values()
+                   if p.resident)
+
+    # --------------------------------------------------------------- search
+    def search(self, queries: np.ndarray, top_k: int,
+               partitions: Optional[Sequence[int]] = None,
+               impl: Optional[str] = None,
+               stats: Optional[SearchStats] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact top-k across the given partitions (default: all).
+
+        Non-resident partitions are loaded on demand (real disk I/O) and
+        released afterwards, matching the paper's on-demand cache behaviour.
+        Returns (scores (Q, k), global chunk ids (Q, k)).
+        """
+        pids = list(partitions) if partitions is not None else \
+            list(self.partitions)
+        q = queries.astype(np.float32)
+        all_s, all_i = [], []
+        for pid in pids:
+            p = self.partitions[pid]
+            loaded_here = False
+            if not p.resident:
+                dt = self.load(pid)
+                loaded_here = True
+                if stats:
+                    stats.partitions_loaded += 1
+                    stats.load_seconds += dt
+            t0 = time.perf_counter()
+            k_eff = min(top_k, p.embeddings.shape[0])
+            s, i = ops.retrieval_topk(q, p.embeddings, k_eff, impl=impl)
+            s, i = np.asarray(s), np.asarray(i)
+            if k_eff < top_k:
+                padw = top_k - k_eff
+                s = np.pad(s, ((0, 0), (0, padw)), constant_values=-1e30)
+                i = np.pad(i, ((0, 0), (0, padw)), constant_values=0)
+            if stats:
+                stats.search_seconds += time.perf_counter() - t0
+                stats.partitions_searched += 1
+            all_s.append(s)
+            all_i.append(p.doc_ids[i])
+            if loaded_here:
+                self.release(pid)
+        scores = np.concatenate(all_s, axis=1)
+        gids = np.concatenate(all_i, axis=1)
+        order = np.argsort(-scores, axis=1)[:, :top_k]
+        return (np.take_along_axis(scores, order, axis=1),
+                np.take_along_axis(gids, order, axis=1))
+
+    def get_chunks(self, ids: np.ndarray) -> List[List[str]]:
+        return [[self.chunks[j] for j in row] for row in ids]
+
+    # ---------------------------------------------------------- bookkeeping
+    def partition_bytes(self) -> int:
+        """Nominal per-partition size (max over partitions)."""
+        return max(p.nbytes for p in self.partitions.values())

@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (HW_V5E, RooflineReport,
+                                     analyze_compiled, collective_bytes)
+
+__all__ = ["HW_V5E", "RooflineReport", "analyze_compiled",
+           "collective_bytes"]

@@ -1,0 +1,8 @@
+from repro.serving.request import Request, latency_table, percentile
+from repro.serving.engine import RagdollEngine, SerialRAGEngine
+from repro.serving.simulator import (ServingSimulator, SimConfig,
+                                     poisson_workload)
+
+__all__ = ["Request", "latency_table", "percentile", "RagdollEngine",
+           "SerialRAGEngine", "ServingSimulator", "SimConfig",
+           "poisson_workload"]

@@ -1,0 +1,186 @@
+"""RAGDoll serving engines (real, thread-driven).
+
+``RagdollEngine`` is the full system: decoupled retrieval/generation
+pipelines, backlog-aware batch schedulers per stage, partition cache
+driven by the joint placement policy, and policy-trace recording (Fig. 9).
+
+``SerialRAGEngine`` is the baseline shape (vLLMRAG/AccRAG-style): one
+worker retrieves then generates per batch, in arrival order.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.pipeline import Pipeline, StageQueue, build_pipeline
+from repro.core.placement import Placement, PlacementOptimizer
+from repro.core.scheduler import BacklogScheduler
+from repro.retrieval.cache import PartitionCache
+from repro.retrieval.embedding import HashEmbedder
+from repro.retrieval.vectorstore import SearchStats, VectorStore
+from repro.serving.generator import Generator
+from repro.serving.request import Request
+
+
+@dataclass
+class PolicyEvent:
+    t: float
+    gen_batch: int
+    resident_partitions: int
+    c_gpu: float
+    w_gpu: float
+
+
+class RagdollEngine:
+    def __init__(self, store: VectorStore, embedder: HashEmbedder,
+                 generator: Generator,
+                 ret_scheduler: BacklogScheduler,
+                 gen_scheduler: BacklogScheduler,
+                 optimizer: Optional[PlacementOptimizer] = None,
+                 initial_partitions: Optional[int] = None):
+        self.store = store
+        self.embedder = embedder
+        self.generator = generator
+        self.opt = optimizer
+        p0 = (initial_partitions if initial_partitions is not None
+              else len(store.partitions))
+        self.pcache = PartitionCache(store, target=p0)
+        self.policy_trace: List[PolicyEvent] = []
+        self.completed: List[Request] = []
+        self._done_lock = threading.Lock()
+        self.pipeline: Pipeline = build_pipeline(
+            self._retrieve_batch, self._generate_batch,
+            ret_scheduler, gen_scheduler,
+            on_ret_boundary=self._ret_boundary,
+            on_gen_boundary=self._gen_boundary)
+        self.gen_scheduler = gen_scheduler
+
+    # ------------------------------------------------------------- stages
+    def _retrieve_batch(self, reqs: List[Request]) -> List[Request]:
+        t0 = time.perf_counter()
+        queries = self.embedder.embed([r.query for r in reqs])
+        # resident partitions answer from RAM; the rest stream from disk
+        stats = SearchStats()
+        scores, ids = self.store.search(queries, reqs[0].top_k, stats=stats)
+        chunks = self.store.get_chunks(ids)
+        t1 = time.perf_counter()
+        for r, ch in zip(reqs, chunks):
+            r.retrieved = ch
+            r.prompt = " ".join(ch) + " " + r.query
+            r.t_ret_start, r.t_ret_end = t0, t1
+        return reqs
+
+    def _generate_batch(self, reqs: List[Request]) -> List[Request]:
+        t0 = time.perf_counter()
+        outs = self.generator.generate([r.prompt for r in reqs])
+        t1 = time.perf_counter()
+        for r, o in zip(reqs, outs):
+            r.output = o
+            r.t_gen_start, r.t_gen_end = t0, t1
+        with self._done_lock:
+            self.completed.extend(reqs)
+        return reqs
+
+    # ---------------------------------------------- lazy reconfiguration
+    def _ret_boundary(self) -> None:
+        pass  # partition target applied by _gen_boundary's placement
+
+    def _gen_boundary(self) -> None:
+        if self.opt is None:
+            return
+        backlog = len(self.pipeline.context_queue)
+        b = max(self.gen_scheduler.choose_batch(max(backlog, 1)), 1)
+        placement = self.opt.solve(b)
+        self.pcache.set_target(placement.resident_partitions)
+        self.policy_trace.append(PolicyEvent(
+            t=time.perf_counter(), gen_batch=b,
+            resident_partitions=placement.resident_partitions,
+            c_gpu=placement.c_gpu, w_gpu=placement.w_gpu))
+
+    # ------------------------------------------------------------- public
+    def start(self) -> None:
+        self.pipeline.start()
+
+    def stop(self) -> None:
+        self.pipeline.stop()
+
+    def submit(self, req: Request) -> None:
+        req.arrival = time.perf_counter() if req.arrival is None \
+            else req.arrival
+        self.pipeline.retrieval_queue.put(req)
+
+    def drain(self, n: int, timeout: float = 120.0) -> List[Request]:
+        t0 = time.time()
+        while time.time() - t0 < timeout:
+            with self._done_lock:
+                if len(self.completed) >= n:
+                    return list(self.completed)
+            time.sleep(0.01)
+        with self._done_lock:
+            return list(self.completed)
+
+
+class SerialRAGEngine:
+    """Baseline: serial retrieve-then-generate, arrival order, one thread."""
+
+    def __init__(self, store: VectorStore, embedder: HashEmbedder,
+                 generator: Generator, batch_size: int = 4):
+        self.store = store
+        self.embedder = embedder
+        self.generator = generator
+        self.batch_size = batch_size
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+
+    def submit(self, req: Request) -> None:
+        with self._lock:
+            self.queue.append(req)
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            with self._lock:
+                batch = self.queue[:self.batch_size]
+                self.queue = self.queue[len(batch):]
+            if not batch:
+                time.sleep(0.005)
+                continue
+            t0 = time.perf_counter()
+            queries = self.embedder.embed([r.query for r in batch])
+            scores, ids = self.store.search(queries, batch[0].top_k)
+            chunks = self.store.get_chunks(ids)
+            t1 = time.perf_counter()
+            for r, ch in zip(batch, chunks):
+                r.retrieved = ch
+                r.prompt = " ".join(ch) + " " + r.query
+                r.t_ret_start, r.t_ret_end = t0, t1
+            outs = self.generator.generate([r.prompt for r in batch])
+            t2 = time.perf_counter()
+            for r, o in zip(batch, outs):
+                r.output = o
+                r.t_gen_start, r.t_gen_end = t1, t2
+            with self._lock:
+                self.completed.extend(batch)
+
+    def drain(self, n: int, timeout: float = 120.0) -> List[Request]:
+        t0 = time.time()
+        while time.time() - t0 < timeout:
+            with self._lock:
+                if len(self.completed) >= n:
+                    return list(self.completed)
+            time.sleep(0.01)
+        with self._lock:
+            return list(self.completed)

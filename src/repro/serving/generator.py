@@ -1,0 +1,95 @@
+"""Batched greedy generation worker for the real (mini) engine.
+
+A deterministic hash tokenizer keeps the substrate self-contained; prompts
+are padded/truncated to a fixed context length so a whole batch prefills
+together, then decodes step-by-step (greedy) with the KV caches.  The
+model path is either the scan-based ``Model`` or the offloading
+``StreamedExecutor`` (the paper's prefetch-queue engine).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.prefetch import PrefetchPolicy, StreamedExecutor
+from repro.models.model import Model, init_cache
+
+
+class HashTokenizer:
+    def __init__(self, vocab_size: int):
+        self.vocab_size = vocab_size
+
+    def encode(self, text: str, length: int) -> np.ndarray:
+        ids = []
+        for w in text.lower().split()[:length]:
+            h = int.from_bytes(
+                hashlib.blake2b(w.encode(), digest_size=4).digest(), "little")
+            ids.append(h % (self.vocab_size - 2) + 2)   # 0=pad, 1=bos
+        ids = [1] + ids
+        ids = ids[:length]
+        ids = ids + [0] * (length - len(ids))
+        return np.asarray(ids, np.int32)
+
+    def decode(self, ids: Sequence[int]) -> str:
+        return " ".join(f"tok{int(i)}" for i in ids)
+
+
+@dataclass
+class GeneratorConfig:
+    ctx_len: int = 64
+    max_new_tokens: int = 16
+    dtype: object = jnp.float32
+
+
+class Generator:
+    """Prefill + greedy decode over a fixed-context batch."""
+
+    def __init__(self, cfg: ModelConfig, params, gen_cfg: GeneratorConfig,
+                 streamed: bool = False,
+                 policy: Optional[PrefetchPolicy] = None):
+        self.cfg = cfg
+        self.gen_cfg = gen_cfg
+        self.tok = HashTokenizer(cfg.vocab_size)
+        self.streamed = streamed
+        if streamed:
+            self.exec = StreamedExecutor(cfg, params,
+                                         policy or PrefetchPolicy())
+            self.model = None
+            self.params = None
+        else:
+            self.model = Model(cfg, remat=False)
+            self.params = params
+            self._prefill = jax.jit(self.model.prefill)
+            self._decode = jax.jit(self.model.decode, donate_argnums=(2,))
+
+    def generate(self, prompts: List[str]) -> List[str]:
+        g = self.gen_cfg
+        b = len(prompts)
+        toks = np.stack([self.tok.encode(p, g.ctx_len) for p in prompts])
+        toks = jnp.asarray(toks)
+        total = g.ctx_len + g.max_new_tokens
+        outs = []
+        if self.streamed:
+            caches = self.exec.init_caches(b, total, g.dtype)
+            logits, caches = self.exec.prefill(toks, caches)
+        else:
+            cache = init_cache(self.cfg, b, total, g.dtype)
+            logits, cache = self._prefill(self.params, toks, cache)
+        cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        outs.append(np.asarray(cur)[:, 0])
+        for t in range(g.max_new_tokens - 1):
+            pos = jnp.full((b,), g.ctx_len + t, jnp.int32)
+            if self.streamed:
+                logits, caches = self.exec.decode(cur, caches, pos)
+            else:
+                logits, cache = self._decode(self.params, cur, cache, pos)
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            outs.append(np.asarray(cur)[:, 0])
+        mat = np.stack(outs, axis=1)     # (B, new)
+        return [self.tok.decode(row) for row in mat]

@@ -1,0 +1,78 @@
+"""Request lifecycle + end-to-end latency accounting (paper key metric).
+
+Latency decomposition follows Table 1: *waiting* is all time a request
+spends queued (before retrieval and between retrieval and generation);
+*retrieval* and *generation* are the in-batch processing times.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclass
+class Request:
+    rid: int
+    query: str
+    arrival: float
+    top_k: int = 5
+    max_new_tokens: int = 32
+
+    retrieved: Optional[List[str]] = None
+    prompt: Optional[str] = None
+    output: Optional[str] = None
+
+    t_ret_start: Optional[float] = None
+    t_ret_end: Optional[float] = None
+    t_gen_start: Optional[float] = None
+    t_gen_end: Optional[float] = None
+
+    # ------------------------------------------------------------- metrics
+    @property
+    def done(self) -> bool:
+        return self.t_gen_end is not None
+
+    @property
+    def latency(self) -> float:
+        return self.t_gen_end - self.arrival
+
+    @property
+    def waiting(self) -> float:
+        return ((self.t_ret_start - self.arrival)
+                + (self.t_gen_start - self.t_ret_end))
+
+    @property
+    def retrieval(self) -> float:
+        return self.t_ret_end - self.t_ret_start
+
+    @property
+    def generation(self) -> float:
+        return self.t_gen_end - self.t_gen_start
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    k = (len(s) - 1) * p / 100.0
+    lo, hi = math.floor(k), math.ceil(k)
+    if lo == hi:
+        return s[lo]
+    return s[lo] + (s[hi] - s[lo]) * (k - lo)
+
+
+def latency_table(reqs: Sequence[Request]) -> Dict[str, float]:
+    done = [r for r in reqs if r.done]
+    if not done:
+        return {"n": 0}
+    lat = [r.latency for r in done]
+    return {
+        "n": len(done),
+        "avg_latency": sum(lat) / len(lat),
+        "avg_waiting": sum(r.waiting for r in done) / len(done),
+        "avg_retrieval": sum(r.retrieval for r in done) / len(done),
+        "avg_generation": sum(r.generation for r in done) / len(done),
+        "p50": percentile(lat, 50), "p90": percentile(lat, 90),
+        "p99": percentile(lat, 99), "max": max(lat),
+    }

@@ -1,0 +1,5 @@
+from repro.sharding.specs import (MeshContext, constrain, from_mesh,
+                                  logical_to_pspec, param_pspecs)
+
+__all__ = ["MeshContext", "param_pspecs", "logical_to_pspec", "constrain",
+           "from_mesh"]

@@ -1,0 +1,8 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.train_loop import make_train_step, TrainState
+from repro.training.checkpoint import save_checkpoint, load_checkpoint
+from repro.training.compression import GradCompressor
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "make_train_step",
+           "TrainState", "save_checkpoint", "load_checkpoint",
+           "GradCompressor"]

@@ -1,0 +1,107 @@
+"""Fault tolerance: checkpointed retrieval, OOM ladder, elasticity."""
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.costmodel import GB, PF_HIGH, CostModel, ModelProfile
+from repro.core.placement import Placement, PlacementOptimizer
+from repro.ft import (CheckpointedRetrieval, ElasticMesh, OOMRecovery,
+                      StragglerMonitor, retry_with_backoff)
+from repro.retrieval import HashEmbedder, VectorStore
+
+
+def _store():
+    emb = HashEmbedder(dim=32)
+    texts = [f"doc {i} t{i % 9}" for i in range(200)]
+    root = tempfile.mkdtemp()
+    return VectorStore.build(texts, emb, num_partitions=5, root=root), emb
+
+
+def test_checkpointed_retrieval_resumes():
+    store, emb = _store()
+    q = emb.embed(["doc 17", "t3"])
+    want_s, want_i = store.search(q, top_k=5)
+
+    fails = {"budget": 3}
+
+    def fault_hook(pid):
+        if pid == 3 and fails["budget"] > 0:
+            fails["budget"] -= 1
+            raise RuntimeError("injected retrieval failure")
+
+    cr = CheckpointedRetrieval(store, fault_hook=fault_hook)
+    got_s, got_i = cr.search(q, top_k=5)
+    assert (got_i == want_i).all()
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-6)
+    assert cr.partitions_resumed >= 3      # partitions 0..2 never redone
+
+
+def test_oom_recovery_ladder_demotes_then_succeeds():
+    mp = ModelProfile.from_config(get_config("llama3-70b"))
+    cm = CostModel(PF_HIGH, mp, partition_bytes=8 * GB, num_partitions=32)
+    opt = PlacementOptimizer(cm, 512, 32)
+    rec = OOMRecovery(opt)
+    start = opt.solve(32)
+    attempts = {"n": 0}
+
+    def gen(p):
+        attempts["n"] += 1
+        if attempts["n"] <= 2:
+            raise RuntimeError("RESOURCE_EXHAUSTED: out of memory")
+        return "ok"
+
+    out, final = rec.run(gen, start)
+    assert out == "ok"
+    assert len(rec.history) == 2
+    # ladder moved memory DOWN the hierarchy
+    assert (final.c_gpu <= start.c_gpu and final.w_gpu <= start.w_gpu)
+
+
+def test_retry_with_backoff():
+    calls = {"n": 0}
+
+    @retry_with_backoff(retries=3, base_delay=0.001)
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("boom")
+        return 42
+
+    assert flaky() == 42
+    assert calls["n"] == 3
+
+
+@settings(max_examples=30, deadline=None)
+@given(total=st.sampled_from([64, 256, 512]),
+       failed=st.integers(0, 200), tp=st.sampled_from([8, 16]))
+def test_elastic_plan_properties(total, failed, tp):
+    failed = min(failed, total - tp)
+    em = ElasticMesh(model_parallel=tp, num_partitions=32)
+    plan = em.plan(total, failed, restore_step=7)
+    alive = total - failed
+    assert plan.devices_used <= alive
+    assert plan.mesh_shape[-1] == tp               # TP layout preserved
+    # every partition assigned exactly once
+    assigned = [p for ps in plan.partition_assignment.values() for p in ps]
+    assert sorted(assigned) == list(range(32))
+    assert plan.restore_step == 7
+
+
+def test_elastic_raises_when_tp_unsatisfiable():
+    em = ElasticMesh(model_parallel=16, num_partitions=32)
+    with pytest.raises(RuntimeError):
+        em.plan(16, 8)
+
+
+def test_straggler_monitor():
+    sm = StragglerMonitor()
+    for h, t in [("a", 1.0), ("b", 1.05), ("c", 0.95), ("slow", 4.0)]:
+        sm.observe(h, t)
+    assert sm.stragglers() == ["slow"]
+    assert sm.batch_scale("slow") < 0.5
+    assert sm.batch_scale("a") == 1.0
+    assert sm.should_backup_dispatch("slow", elapsed=15.0)
+    assert not sm.should_backup_dispatch("a", elapsed=2.0)

@@ -1,0 +1,142 @@
+"""Per-kernel correctness: shape/dtype sweeps vs the pure-jnp oracles.
+
+Every optimized tier (pallas interpret, kv_scan, block_causal, flash_vjp)
+is asserted allclose against ``ref.py``.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_vjp import flash_attention_train
+
+
+def _mk(rng, *shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+ATTN_SHAPES = [
+    # (B, S, H, KV, D)
+    (1, 64, 4, 4, 16),      # MHA
+    (2, 128, 8, 2, 32),     # GQA
+    (1, 96, 6, 1, 64),      # MQA, non-pow2 seq
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("impl", ["kv_scan", "pallas"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(rng, shape, impl, dtype):
+    b, s, h, kv, d = shape
+    if impl == "pallas" and s % 32 != 0:
+        pytest.skip("pallas path needs divisible blocks")
+    q, k, v = (_mk(rng, b, s, h, d, dtype=dtype),
+               _mk(rng, b, s, kv, d, dtype=dtype),
+               _mk(rng, b, s, kv, d, dtype=dtype))
+    want = ref.attention_reference(q, k, v, causal=True)
+    got = ops.flash_attention(q, k, v, causal=True, impl=impl,
+                              block_q=32, block_kv=32)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("impl", ["kv_scan", "block_causal", "pallas",
+                                  "flash_vjp"])
+@pytest.mark.parametrize("window,softcap", [(None, None), (48, None),
+                                            (None, 30.0), (32, 50.0)])
+def test_attention_variants(rng, impl, window, softcap):
+    b, s, h, kv, d = 2, 128, 8, 4, 32
+    q, k, v = (_mk(rng, b, s, h, d), _mk(rng, b, s, kv, d),
+               _mk(rng, b, s, kv, d))
+    want = ref.attention_reference(q, k, v, causal=True, window=window,
+                                   softcap=softcap)
+    if impl == "flash_vjp":
+        got = flash_attention_train(q, k, v, causal=True, window=window,
+                                    softcap=softcap, block=32)
+    else:
+        got = ops.flash_attention(q, k, v, causal=True, window=window,
+                                  softcap=softcap, impl=impl,
+                                  block_q=32, block_kv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_attention_kv_len_and_offset(rng):
+    b, s, h, kv, d = 2, 64, 4, 2, 16
+    q, k, v = (_mk(rng, b, s, h, d), _mk(rng, b, s, kv, d),
+               _mk(rng, b, s, kv, d))
+    kvlen = jnp.array([50, 33])
+    for impl in ("kv_scan", "pallas"):
+        want = ref.attention_reference(q, k, v, causal=True, kv_len=kvlen)
+        got = ops.flash_attention(q, k, v, causal=True, kv_len=kvlen,
+                                  impl=impl, block_q=16, block_kv=16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5)
+
+
+def test_flash_vjp_gradients(rng):
+    b, s, h, kv, d = 2, 96, 4, 2, 16
+    q, k, v = (_mk(rng, b, s, h, d), _mk(rng, b, s, kv, d),
+               _mk(rng, b, s, kv, d))
+    for kw in [dict(causal=True), dict(causal=False),
+               dict(causal=True, window=40, softcap=20.0)]:
+        g_ref = jax.grad(lambda *a: (ref.attention_reference(
+            *a, **kw) ** 2).sum(), argnums=(0, 1, 2))(q, k, v)
+        g_new = jax.grad(lambda *a: (flash_attention_train(
+            *a, block=32, **kw) ** 2).sum(), argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(g_ref, g_new):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=5e-4)
+
+
+@pytest.mark.parametrize("impl", ["einsum", "pallas"])
+@pytest.mark.parametrize("window,softcap", [(None, None), (24, 50.0)])
+def test_decode_attention(rng, impl, window, softcap):
+    b, s, h, kv, d = 3, 128, 8, 4, 32
+    kc, vc = _mk(rng, b, s, kv, d), _mk(rng, b, s, kv, d)
+    q = _mk(rng, b, h, d)
+    kvlen = jnp.array([100, 64, 128])
+    want = ref.decode_attention_reference(q, kc, vc, kvlen, window=window,
+                                          softcap=softcap)
+    got = ops.decode_attention(q, kc, vc, kvlen, window=window,
+                               softcap=softcap, impl=impl, block_kv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["blocked", "pallas"])
+@pytest.mark.parametrize("qn,n,d,k", [(7, 1000, 32, 5), (64, 4096, 64, 10),
+                                      (1, 100, 16, 3)])
+def test_retrieval_topk(rng, impl, qn, n, d, k):
+    qs, db = _mk(rng, qn, d), _mk(rng, n, d)
+    ws, wi = ref.topk_reference(qs, db, k)
+    gs, gi = ops.retrieval_topk(qs, db, k, impl=impl, block_n=256)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), atol=1e-4)
+    assert (np.asarray(gi) == np.asarray(wi)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(qn=st.integers(1, 12), n=st.integers(10, 400),
+       k=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_topk_property(qn, n, k, seed):
+    """Property: blocked top-k == global top-k for any shapes."""
+    k = min(k, n)
+    r = np.random.default_rng(seed)
+    qs = jnp.asarray(r.normal(size=(qn, 16)), jnp.float32)
+    db = jnp.asarray(r.normal(size=(n, 16)), jnp.float32)
+    ws, wi = ref.topk_reference(qs, db, k)
+    gs, gi = ops.retrieval_topk(qs, db, k, impl="blocked", block_n=37)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), atol=1e-4)
+    assert (np.asarray(gi) == np.asarray(wi)).all()
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (2, 3, 128), (5, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(rng, shape, dtype):
+    x = _mk(rng, *shape, dtype=dtype)
+    w = _mk(rng, shape[-1])
+    want = ref.rmsnorm_reference(x, w)
+    got = ops.rmsnorm(x, w, impl="pallas")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=1e-2)

@@ -1,0 +1,85 @@
+"""Pipeline machinery: queue conservation, worker isolation, boundaries."""
+import threading
+import time
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pipeline import StageQueue, build_pipeline
+from repro.core.scheduler import BacklogScheduler
+
+
+def _sched(cap=8, c=0.3):
+    s = BacklogScheduler(max_batch=cap)
+    s.seed([(b, 0.001 * b ** c) for b in (1, 2, 4, 8)])
+    return s
+
+
+def test_stage_queue_fifo_and_batch():
+    q = StageQueue("q")
+    for i in range(10):
+        q.put(i)
+    assert len(q) == 10
+    assert q.pop_batch(4) == [0, 1, 2, 3]
+    assert q.pop_batch(100) == [4, 5, 6, 7, 8, 9]
+    assert q.pop_batch(1) == []
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 40))
+def test_pipeline_conserves_items(n):
+    seen = []
+    lock = threading.Lock()
+
+    def ret_fn(items):
+        time.sleep(0.0005)
+        return [i * 2 for i in items]
+
+    def gen_fn(items):
+        time.sleep(0.0005)
+        with lock:
+            seen.extend(items)
+        return items
+
+    pipe = build_pipeline(ret_fn, gen_fn, _sched(), _sched())
+    pipe.start()
+    for i in range(n):
+        pipe.retrieval_queue.put(i)
+    t0 = time.time()
+    while len(pipe.done_queue) < n and time.time() - t0 < 30:
+        time.sleep(0.002)
+    pipe.stop()
+    assert sorted(seen) == sorted(i * 2 for i in range(n))
+    assert len(pipe.done_queue) == n
+
+
+def test_boundary_hook_called_between_batches():
+    calls = {"n": 0}
+
+    def boundary():
+        calls["n"] += 1
+
+    pipe = build_pipeline(lambda x: x, lambda x: x, _sched(), _sched(),
+                          on_gen_boundary=boundary)
+    pipe.start()
+    for i in range(20):
+        pipe.retrieval_queue.put(i)
+    t0 = time.time()
+    while len(pipe.done_queue) < 20 and time.time() - t0 < 30:
+        time.sleep(0.002)
+    pipe.stop()
+    assert calls["n"] >= 1
+
+
+def test_workers_observe_timings():
+    pipe = build_pipeline(lambda x: x, lambda x: x, _sched(), _sched())
+    pipe.start()
+    for i in range(16):
+        pipe.retrieval_queue.put(i)
+    t0 = time.time()
+    while len(pipe.done_queue) < 16 and time.time() - t0 < 30:
+        time.sleep(0.002)
+    pipe.stop()
+    for w in pipe.workers:
+        assert w.stats.batches >= 1
+        assert w.stats.items == 16
+        assert len(w.scheduler.samples) > 0

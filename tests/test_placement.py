@@ -1,0 +1,77 @@
+"""Joint memory placement (paper Eq. 2–3): feasibility invariants."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.costmodel import (GB, PF_HIGH, PF_LOW, CostModel,
+                                  ModelProfile)
+from repro.core.placement import Placement, PlacementOptimizer
+from repro.core.profiler import ActiveProfiler
+
+
+def _opt(model="llama3-8b", hw=PF_HIGH):
+    mp = ModelProfile.from_config(get_config(model))
+    cm = CostModel(hw, mp, partition_bytes=8 * GB, num_partitions=32)
+    return PlacementOptimizer(cm, avg_ctx_len=512, avg_out_len=32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(wg=st.floats(0, 1), cg=st.floats(0, 1),
+       pres=st.integers(0, 32), b=st.sampled_from([1, 4, 16, 64, 256]))
+def test_project_always_feasible(wg, cg, pres, b):
+    opt = _opt("llama3-70b", PF_LOW)
+    p = Placement(w_gpu=wg, w_cpu=1 - wg, c_gpu=cg, c_cpu=1 - cg,
+                  resident_partitions=pres, gen_batch=b)
+    q = opt.project(p)
+    assert opt.feasible(q), q
+
+
+@pytest.mark.parametrize("model,hw", [("llama3-8b", PF_HIGH),
+                                      ("llama3-70b", PF_HIGH),
+                                      ("llama3-8b", PF_LOW),
+                                      ("llama3-70b", PF_LOW)])
+def test_solve_returns_feasible(model, hw):
+    opt = _opt(model, hw)
+    for b in (4, 16, 64):
+        p = opt.solve(b)
+        assert opt.feasible(p)
+        use = opt.memory_use(p)
+        assert use.gpu <= hw.gpu_mem * hw.mem_headroom
+        assert use.cpu <= hw.cpu_mem * hw.mem_headroom
+
+
+def test_memory_monotone_in_batch():
+    opt = _opt()
+    p8 = Placement(0.5, 0.5, 0.5, 0.5, 4, 8)
+    p64 = dataclasses.replace(p8, gen_batch=64)
+    assert opt.memory_use(p64).gpu > opt.memory_use(p8).gpu
+
+
+def test_bigger_model_offloads_more():
+    """70B must put a smaller weight fraction on the 24GB GPU than 8B."""
+    p8 = _opt("llama3-8b").solve(32)
+    p70 = _opt("llama3-70b").solve(32)
+    assert p70.w_gpu < p8.w_gpu
+
+
+def test_profiler_balances_pipelines():
+    opt = _opt("llama3-70b")
+    res = ActiveProfiler(opt, batches=(8, 16, 32, 64)).profile()
+    assert res.best_batch in res.placements
+    assert opt.feasible(res.best_placement)
+    assert len(res.gen_samples) >= 3
+
+
+def test_retrieval_time_decreases_with_residency():
+    opt = _opt()
+    ts = [opt.cost.retrieval_time(32, r) for r in (0, 8, 16, 32)]
+    assert all(a >= b for a, b in zip(ts, ts[1:]))
+
+
+def test_paper_70b_needs_offloading():
+    """Sanity vs paper setup: 70B weights cannot fully fit PF-High VRAM."""
+    opt = _opt("llama3-70b", PF_HIGH)
+    full = Placement(1.0, 0.0, 1.0, 0.0, 0, 8)
+    assert not opt.feasible(full)

@@ -1,0 +1,81 @@
+"""Vector store: exact search, disk tier, cache invariants."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.retrieval import HashEmbedder, PartitionCache, VectorStore
+from repro.retrieval.vectorstore import SearchStats
+
+
+@pytest.fixture
+def store_and_texts():
+    emb = HashEmbedder(dim=48)
+    texts = [f"chunk {i} topic{i % 11} word{i % 7}" for i in range(300)]
+    with tempfile.TemporaryDirectory() as root:
+        yield VectorStore.build(texts, emb, num_partitions=6, root=root), \
+            texts, emb
+
+
+def test_search_equals_bruteforce(store_and_texts):
+    store, texts, emb = store_and_texts
+    q = emb.embed(["chunk 42 topic9", "topic3 word2"])
+    s, ids = store.search(q, top_k=7)
+    all_emb = emb.embed(texts)
+    ws, wi = ref.topk_reference(jnp.asarray(q), jnp.asarray(all_emb), 7)
+    assert (np.asarray(wi) == ids).all()
+
+
+def test_spill_load_roundtrip(store_and_texts):
+    store, texts, emb = store_and_texts
+    before = store.partitions[3].embeddings.copy()
+    store.spill(3)
+    assert not store.partitions[3].resident
+    assert os.path.exists(store.partitions[3].path)
+    dt = store.load(3)
+    assert dt >= 0
+    np.testing.assert_array_equal(store.partitions[3].embeddings, before)
+
+
+def test_search_loads_and_releases_spilled(store_and_texts):
+    store, texts, emb = store_and_texts
+    for pid in range(3, 6):
+        store.spill(pid)
+    stats = SearchStats()
+    q = emb.embed(["whatever"])
+    store.search(q, top_k=3, stats=stats)
+    assert stats.partitions_loaded == 3
+    assert stats.partitions_searched == 6
+    # spilled partitions were released again after the sweep
+    assert sorted(store.resident_set()) == [0, 1, 2]
+
+
+def test_embedder_deterministic_and_similar():
+    emb = HashEmbedder(dim=64)
+    a1 = emb.embed_one("the cat sat on the mat")
+    a2 = emb.embed_one("the cat sat on the mat")
+    b = emb.embed_one("completely unrelated text about protons")
+    np.testing.assert_array_equal(a1, a2)
+    sim_self = a1 @ emb.embed_one("the cat sat on a mat")
+    sim_other = a1 @ b
+    assert sim_self > sim_other
+
+
+@settings(max_examples=15, deadline=None)
+@given(target=st.integers(0, 6), touches=st.lists(st.integers(0, 5),
+                                                  max_size=20))
+def test_partition_cache_respects_target(target, touches):
+    emb = HashEmbedder(dim=16)
+    texts = [f"t{i}" for i in range(60)]
+    with tempfile.TemporaryDirectory() as root:
+        store = VectorStore.build(texts, emb, num_partitions=6, root=root)
+        cache = PartitionCache(store, target=target)
+        for pid in touches:
+            cache.touch(pid)
+            assert len(cache.resident()) <= max(target, 1)
+        cache.set_target(0)
+        assert len(cache.resident()) == 0

@@ -1,0 +1,76 @@
+"""Backlog-aware scheduler (paper Eq. 4–8): fit + optimality properties."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (BacklogScheduler, batch_avg_latency,
+                                  fit_power_law, max_batch_optimal,
+                                  power_time)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=st.floats(0.1, 50.0), c=st.floats(0.0, 2.0))
+def test_power_law_fit_recovers(a, c):
+    samples = [(b, a * b ** c) for b in (2, 4, 8, 16, 32)]
+    a_hat, c_hat = fit_power_law(samples)
+    assert abs(a_hat - a) / a < 1e-6
+    assert abs(c_hat - c) < 1e-6
+
+
+def test_eq8_threshold():
+    """Eq. 8: for k=2 the max batch wins iff c <= log2(3/2)."""
+    thr = math.log2(1.5)
+    assert max_batch_optimal(thr - 1e-6, k=2)
+    assert not max_batch_optimal(thr + 1e-6, k=2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(c=st.floats(0.0, 1.8), n=st.integers(2, 200))
+def test_choose_batch_minimizes_L_k(c, n):
+    """The scheduler's choice is optimal among its candidate batch sizes."""
+    sch = BacklogScheduler(max_batch=64)
+    sch.seed([(b, 2.0 * b ** c) for b in (1, 2, 4, 8, 16, 32, 64)])
+    chosen = sch.choose_batch(n)
+    assert 1 <= chosen <= min(64, n)
+
+    def avg_lat(b):
+        k = math.ceil(min(n, 64 * 8) / b)
+        return batch_avg_latency(min(n, 64 * 8), k, sch.a, sch.c)
+
+    cands = sorted({min(x, 64, n) for x in (1, 2, 4, 8, 16, 32, 64, 128)}
+                   | {min(n, 64)})
+    best = min(cands, key=avg_lat)
+    assert avg_lat(chosen) <= avg_lat(best) + 1e-9
+
+
+def test_sublinear_prefers_max_batch():
+    sch = BacklogScheduler(max_batch=64)
+    sch.seed([(b, 3.0 * b ** 0.3) for b in (2, 4, 8, 16, 32, 64)])
+    assert sch.choose_batch(64) == 64
+    assert sch.choose_batch(200) == 64
+
+
+def test_superlinear_prefers_small_batch():
+    sch = BacklogScheduler(max_batch=64)
+    sch.seed([(b, 3.0 * b ** 1.5) for b in (2, 4, 8, 16, 32, 64)])
+    assert sch.choose_batch(64) <= 4
+
+
+def test_online_observation_shifts_decision():
+    sch = BacklogScheduler(max_batch=64)
+    sch.seed([(b, 1.0 * b ** 0.2) for b in (4, 8, 16, 32, 64)])
+    assert sch.choose_batch(64) == 64
+    # new measurements reveal superlinear scaling (memory pressure)
+    for _ in range(20):
+        for b in (8, 16, 32, 64):
+            sch.observe(b, 0.5 * b ** 1.6)
+    assert sch.choose_batch(64) < 64
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 500), c=st.floats(0, 2), a=st.floats(0.01, 10))
+def test_batch_latency_positive_monotone_k1(n, c, a):
+    l1 = batch_avg_latency(n, 1, a, c)
+    assert l1 > 0
+    assert l1 == pytest.approx(power_time(a, c, n))

@@ -1,0 +1,59 @@
+"""Mamba2 SSD: chunked scan == sequential recurrence (the SSM invariant)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.models.ssm import ssd_chunked, ssd_step
+
+
+def _run_both(r, b, s, h, p, g, n, chunk):
+    x = jnp.asarray(r.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.01, 0.3, size=(b, s, h)), jnp.float32)
+    a = -jnp.asarray(r.uniform(0.05, 1.0, size=(h,)), jnp.float32)
+    bm = jnp.asarray(r.normal(size=(b, s, g, n)), jnp.float32)
+    cm = jnp.asarray(r.normal(size=(b, s, g, n)), jnp.float32)
+    y_c, st_c = ssd_chunked(x, dt, a, bm, cm, chunk)
+    st = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        y, st = ssd_step(x[:, t], dt[:, t], a, bm[:, t], cm[:, t], st)
+        ys.append(y)
+    return y_c, st_c, jnp.stack(ys, 1), st
+
+
+def test_ssd_chunked_equals_step():
+    r = np.random.default_rng(3)
+    y_c, st_c, y_s, st_s = _run_both(r, 2, 16, 4, 8, 2, 16, chunk=4)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_c), np.asarray(st_s), atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.sampled_from([4, 8, 12, 24]), chunk=st.sampled_from([2, 4]),
+       h=st.sampled_from([2, 4]), seed=st.integers(0, 1000))
+def test_ssd_property(s, chunk, h, seed):
+    if s % chunk:
+        s = (s // chunk) * chunk or chunk
+    r = np.random.default_rng(seed)
+    y_c, st_c, y_s, st_s = _run_both(r, 1, s, h, 4, 1, 8, chunk)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_c), np.asarray(st_s), atol=2e-4)
+
+
+def test_ssd_state_continuation():
+    """Splitting a sequence across two chunked calls == one call."""
+    r = np.random.default_rng(5)
+    b, s, h, p, g, n = 1, 16, 2, 4, 1, 8
+    x = jnp.asarray(r.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.01, 0.3, size=(b, s, h)), jnp.float32)
+    a = -jnp.asarray(r.uniform(0.05, 1.0, size=(h,)), jnp.float32)
+    bm = jnp.asarray(r.normal(size=(b, s, g, n)), jnp.float32)
+    cm = jnp.asarray(r.normal(size=(b, s, g, n)), jnp.float32)
+    y_full, st_full = ssd_chunked(x, dt, a, bm, cm, 4)
+    y1, st1 = ssd_chunked(x[:, :8], dt[:, :8], a, bm[:, :8], cm[:, :8], 4)
+    y2, st2 = ssd_chunked(x[:, 8:], dt[:, 8:], a, bm[:, 8:], cm[:, 8:], 4,
+                          init_state=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               atol=1e-4)

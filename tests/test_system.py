@@ -1,0 +1,105 @@
+"""End-to-end behaviour of the full system (the paper's claims, in-mini).
+
+The real engine (threads, real retrieval with disk partitions, real JAX
+generation) is compared against the serial baseline on the same workload;
+the pipelined system must overlap retrieval with generation.
+"""
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.prefetch import PrefetchPolicy, StreamedExecutor
+from repro.core.scheduler import BacklogScheduler
+from repro.models.model import Model
+from repro.retrieval import HashEmbedder, VectorStore
+from repro.serving.engine import RagdollEngine, SerialRAGEngine
+from repro.serving.generator import Generator, GeneratorConfig
+from repro.serving.request import Request, latency_table
+
+
+def _system(tmp, n_chunks=160, parts=4, resident=2):
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    params = Model(cfg, remat=False).init(jax.random.PRNGKey(0),
+                                          jnp.float32)
+    gen = Generator(cfg, params, GeneratorConfig(ctx_len=32,
+                                                 max_new_tokens=4))
+    emb = HashEmbedder(dim=32)
+    texts = [f"knowledge {i} about area{i % 9}" for i in range(n_chunks)]
+    store = VectorStore.build(texts, emb, num_partitions=parts, root=tmp)
+    for pid in range(resident, parts):
+        store.spill(pid)
+    return store, emb, gen
+
+
+def _submit_all(eng, n):
+    for i in range(n):
+        eng.submit(Request(rid=i, query=f"area{i % 9} question {i}",
+                           arrival=time.perf_counter()))
+    reqs = eng.drain(n, timeout=180)
+    eng.stop()
+    return reqs
+
+
+def test_full_system_ragdoll_vs_serial():
+    n = 8
+    with tempfile.TemporaryDirectory() as tmp:
+        store, emb, gen = _system(tmp)
+        eng = RagdollEngine(store, emb, gen,
+                            BacklogScheduler(max_batch=8),
+                            BacklogScheduler(max_batch=4),
+                            initial_partitions=2)
+        eng.start()
+        rag = _submit_all(eng, n)
+    with tempfile.TemporaryDirectory() as tmp:
+        store, emb, gen = _system(tmp)
+        ser = SerialRAGEngine(store, emb, gen, batch_size=2)
+        ser.start()
+        serial = _submit_all(ser, n)
+
+    t_rag = latency_table(rag)
+    t_ser = latency_table(serial)
+    assert t_rag["n"] == n and t_ser["n"] == n
+    # outputs deterministic given same retrieval: every request answered
+    assert all(r.output for r in rag)
+    # retrieved chunks are topically relevant (hash embedder property)
+    hit = sum(any(f"area{r.rid % 9}" in c for c in r.retrieved)
+              for r in rag)
+    assert hit >= n // 2
+
+
+def test_streamed_executor_equals_resident_generation():
+    """Offloading (prefetch-queue) generation == fully-resident generation."""
+    cfg = get_config("llama3-8b").reduced(num_layers=3)
+    params = Model(cfg, remat=False).init(jax.random.PRNGKey(1),
+                                          jnp.float32)
+    g_res = Generator(cfg, params, GeneratorConfig(ctx_len=16,
+                                                   max_new_tokens=4))
+    g_str = Generator(cfg, params, GeneratorConfig(ctx_len=16,
+                                                   max_new_tokens=4),
+                      streamed=True,
+                      policy=PrefetchPolicy(max_depth=2, prefill_depth=1))
+    prompts = ["alpha beta gamma", "delta epsilon"]
+    assert g_res.generate(prompts) == g_str.generate(prompts)
+
+
+def test_adaptive_policy_trace_under_load():
+    with tempfile.TemporaryDirectory() as tmp:
+        store, emb, gen = _system(tmp)
+        from repro.core.costmodel import GB, PF_HIGH, CostModel, ModelProfile
+        from repro.core.placement import PlacementOptimizer
+        mp = ModelProfile.from_config(get_config("llama3-8b"))
+        cm = CostModel(PF_HIGH, mp, partition_bytes=2 * GB,
+                       num_partitions=4)
+        opt = PlacementOptimizer(cm, 64, 8)
+        eng = RagdollEngine(store, emb, gen,
+                            BacklogScheduler(max_batch=8),
+                            BacklogScheduler(max_batch=4),
+                            optimizer=opt, initial_partitions=2)
+        eng.start()
+        reqs = _submit_all(eng, 6)
+    assert len(reqs) == 6
+    assert len(eng.policy_trace) >= 1       # Fig. 9 machinery exercised
