@@ -23,6 +23,7 @@ def run(full: bool = False):
         rows.append((
             f"fig9/quartile{q + 1}", us / max(n, 1),
             f"batch={avg('batch'):.0f} P={avg('P'):.1f} "
+            f"nprobe={avg('nprobe'):.1f} "
             f"c_gpu={avg('c_gpu'):.2f} backlog={avg('backlog'):.0f}"))
     # the paper's qualitative claim: batch grows, placement demotes
     if len(tr) >= 8:
@@ -32,5 +33,6 @@ def run(full: bool = False):
             "fig9/adaptation", 0.0,
             f"batch {g(first, 'batch'):.0f}->{g(last, 'batch'):.0f} "
             f"P {g(first, 'P'):.1f}->{g(last, 'P'):.1f} "
+            f"nprobe {g(first, 'nprobe'):.1f}->{g(last, 'nprobe'):.1f} "
             f"c_gpu {g(first, 'c_gpu'):.2f}->{g(last, 'c_gpu'):.2f}"))
     return rows

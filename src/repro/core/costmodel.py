@@ -141,16 +141,23 @@ class CostModel:
         flops = 2.0 * batch * self.chunks_per_partition * self.db_dim
         return flops / self.hw.cpu_flops
 
-    def retrieval_time(self, batch: int, resident: int) -> float:
-        """One retrieval batch over the full database.
+    def retrieval_time(self, batch: int, resident: int,
+                       nprobe: Optional[int] = None) -> float:
+        """One retrieval batch over the probed partitions.
 
-        Non-resident partitions stream from disk; loading dominates
-        (paper §4.4), and search of a loaded partition overlaps the next
-        load, so total ~ loads + residual search.
+        ``nprobe=None`` is the exact all-partition sweep; an IVF placement
+        prunes to ``nprobe`` clusters, so both the loads and the searches
+        shrink.  The cache keeps the hottest partitions, so probed
+        partitions hit residents first.  Non-resident partitions stream
+        from disk; loading dominates (paper §4.4), and search of a loaded
+        partition overlaps the next load (double-buffered streamer), so
+        total ~ max(loads, search) + small residual.
         """
-        n_load = max(self.num_partitions - resident, 0)
+        n_probe = (self.num_partitions if nprobe is None
+                   else max(1, min(nprobe, self.num_partitions)))
+        n_load = max(n_probe - resident, 0)
         load = n_load * self.partition_load_time()
-        search = self.num_partitions * self.partition_search_time(batch)
+        search = n_probe * self.partition_search_time(batch)
         return max(load, search) + 0.1 * min(load, search)
 
     # ---------------------------------------------------------- generation

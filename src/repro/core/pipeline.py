@@ -89,14 +89,16 @@ class PipelineWorker(threading.Thread):
         self.on_batch_boundary = on_batch_boundary
         self.idle_wait = idle_wait
         self.stats = WorkerStats()
-        self._stop = threading.Event()
+        # NB: must not be named ``_stop`` — that would shadow
+        # threading.Thread._stop() and blow up inside Thread.join()
+        self._stop_event = threading.Event()
         self._lock = threading.Lock()    # independent per-worker lock (§4.2)
 
     def stop(self) -> None:
-        self._stop.set()
+        self._stop_event.set()
 
     def run(self) -> None:
-        while not self._stop.is_set():
+        while not self._stop_event.is_set():
             backlog = len(self.in_queue)
             if backlog == 0:
                 self.in_queue.wait(self.idle_wait)

@@ -31,6 +31,7 @@ class Placement:
     c_cpu: float                 # fraction on host
     resident_partitions: int     # P
     gen_batch: int               # B
+    nprobe: Optional[int] = None  # IVF probe width (None = exact sweep)
 
     def __post_init__(self):
         assert -1e-9 <= self.w_gpu and self.w_gpu + self.w_cpu <= 1 + 1e-9
@@ -53,10 +54,19 @@ class MemoryUse:
 
 class PlacementOptimizer:
     def __init__(self, cost: CostModel, avg_ctx_len: int = 512,
-                 avg_out_len: int = 128):
+                 avg_out_len: int = 128, min_nprobe_frac: float = 0.25):
         self.cost = cost
         self.avg_ctx = avg_ctx_len
         self.avg_out = avg_out_len
+        # recall floor: never probe fewer than this fraction of the
+        # clusters (the fig11 sweep validates >=0.9 recall@k down here)
+        self.min_nprobe_frac = min_nprobe_frac
+
+    def _nprobe_grid(self) -> List[int]:
+        p_max = self.cost.num_partitions
+        floor = max(1, int(math.ceil(self.min_nprobe_frac * p_max)))
+        return sorted({max(floor, p_max // 4), max(floor, p_max // 2),
+                       p_max})
 
     # ------------------------------------------------------------ memory
     def memory_use(self, p: Placement) -> MemoryUse:
@@ -116,7 +126,8 @@ class PlacementOptimizer:
     def pipeline_times(self, p: Placement, ret_batch: Optional[int] = None
                        ) -> Tuple[float, float]:
         t_ret = self.cost.retrieval_time(ret_batch or p.gen_batch,
-                                         p.resident_partitions)
+                                         p.resident_partitions,
+                                         nprobe=p.nprobe)
         t_gen = self.cost.batch_generation_time(
             p.gen_batch, self.avg_ctx, self.avg_out, p.w_gpu, p.c_gpu,
             w_cpu=p.w_cpu)
@@ -130,8 +141,11 @@ class PlacementOptimizer:
         dominates, extra capacity on the other side is free.
         """
         t_ret, t_gen = self.pipeline_times(p)
+        nprobe = p.nprobe if p.nprobe is not None \
+            else self.cost.num_partitions
         tie = (p.resident_partitions / max(self.cost.num_partitions, 1)
-               + p.w_gpu + 0.5 * p.c_gpu + 0.25 * p.w_cpu)
+               + p.w_gpu + 0.5 * p.c_gpu + 0.25 * p.w_cpu
+               + 0.5 * nprobe / max(self.cost.num_partitions, 1))
         return max(t_ret, t_gen) / max(p.gen_batch, 1) * (1 - 1e-4 * tie)
 
     # -------------------------------------------------------------- solve
@@ -141,6 +155,7 @@ class PlacementOptimizer:
         mp, hw = self.cost.mp, self.cost.hw
         out = []
         p_max = self.cost.num_partitions
+        nprobes = self._nprobe_grid()
         for pres in {0, p_max // 8, p_max // 4, p_max // 2,
                      3 * p_max // 4, p_max}:
             for wg in (0.0, 0.25, 0.5, 0.75, 1.0):
@@ -152,8 +167,13 @@ class PlacementOptimizer:
                             c_cpu=min(1.0 - cg, 1.0),
                             resident_partitions=pres, gen_batch=gen_batch)
                         cand = self.project(cand)
-                        if self.feasible(cand):
-                            out.append(cand)
+                        if not self.feasible(cand):
+                            continue
+                        # nprobe is memory-neutral: feasibility is shared
+                        # across the whole probe-width column
+                        for nprobe in nprobes:
+                            out.append(dataclasses.replace(cand,
+                                                           nprobe=nprobe))
         return out
 
     def solve(self, gen_batch: int) -> Placement:

@@ -48,7 +48,7 @@ class ActiveProfiler:
             if p.gen_batch != b:       # infeasible at this batch; projected
                 p = self.opt.project(
                     Placement(p.w_gpu, p.w_cpu, p.c_gpu, p.c_cpu,
-                              p.resident_partitions, b))
+                              p.resident_partitions, b, nprobe=p.nprobe))
                 if not self.opt.feasible(p):
                     continue
             t_ret, t_gen = (measure(p) if measure is not None

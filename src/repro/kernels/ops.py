@@ -356,6 +356,58 @@ def _topk_blocked(queries, database, k, *, block_n):
 
 
 # ===========================================================================
+# Retrieval multi-partition merge (IVF scoreboard fusion)
+# ===========================================================================
+
+def retrieval_topk_merge(
+    part_scores: jnp.ndarray,   # (Q, P, k) per-partition top-k scores
+    part_ids: jnp.ndarray,      # (Q, P, k) matching global chunk ids
+    mask: jnp.ndarray,          # (Q, P) bool — per-query IVF probe set
+    k: int,
+    *,
+    impl: Optional[str] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fuse per-partition scoreboards into a global top-k without a host
+    round trip.  The mask is per (query, partition): masked-out (pruned)
+    entries never contribute."""
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "blocked"
+    if impl == "naive":
+        return ref.topk_merge_reference(part_scores, part_ids, mask, k)
+    if impl == "pallas":
+        from repro.kernels import topk_retrieval as tk
+        return tk.topk_merge_pallas(part_scores, part_ids, mask, k,
+                                    interpret=not _on_tpu())
+    if impl == "blocked":
+        return _topk_merge_blocked(part_scores, part_ids, mask, k)
+    raise ValueError(f"unknown merge impl {impl!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _topk_merge_blocked(part_scores, part_ids, mask, k):
+    """Scan partitions with a running (Q, k) scoreboard — same memory shape
+    as the Pallas kernel (never materializes the (Q, P*k) concat)."""
+    qn = part_scores.shape[0]
+
+    def body(carry, xs):
+        run_s, run_i = carry
+        s, i, m = xs                              # (Q, k), (Q, k), (Q,)
+        s = jnp.where(m[:, None], s.astype(jnp.float32), NEG_INF)
+        cat_s = jnp.concatenate([run_s, s], axis=1)
+        cat_i = jnp.concatenate([run_i, i.astype(jnp.int32)], axis=1)
+        new_s, pos = jax.lax.top_k(cat_s, k)
+        return (new_s, jnp.take_along_axis(cat_i, pos, axis=1)), None
+
+    s0 = jnp.full((qn, k), NEG_INF, jnp.float32)
+    i0 = jnp.full((qn, k), -1, jnp.int32)
+    (scores, idx), _ = jax.lax.scan(
+        body, (s0, i0),
+        (part_scores.transpose(1, 0, 2), part_ids.transpose(1, 0, 2),
+         mask.astype(bool).T))
+    return scores, idx
+
+
+# ===========================================================================
 # RMSNorm
 # ===========================================================================
 

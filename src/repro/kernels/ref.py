@@ -110,6 +110,29 @@ def topk_reference(
     return jax.lax.top_k(scores, k)
 
 
+def topk_merge_reference(
+    part_scores: jnp.ndarray,   # (Q, P, k) per-partition top-k scoreboards
+    part_ids: jnp.ndarray,      # (Q, P, k) matching global chunk ids
+    mask: jnp.ndarray,          # (Q, P) bool — per-query IVF probe set
+    k: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fuse per-partition top-k scoreboards into a global top-k.
+
+    The mask is per (query, partition): batched IVF probes each query's
+    own ``nprobe`` clusters, so one query's pruned partition may be
+    another's best.  Masked-out entries are forced to NEG_INF before the
+    merge, so their ids can only surface when fewer than ``k`` valid
+    candidates exist at all.
+    """
+    q, p, kk = part_scores.shape
+    s = jnp.where(mask[:, :, None], part_scores.astype(jnp.float32),
+                  NEG_INF)
+    flat_s = s.reshape(q, p * kk)
+    flat_i = part_ids.reshape(q, p * kk)
+    top_s, pos = jax.lax.top_k(flat_s, k)
+    return top_s, jnp.take_along_axis(flat_i, pos, axis=1)
+
+
 def rmsnorm_reference(x: jnp.ndarray, w: jnp.ndarray,
                       eps: float = 1e-6) -> jnp.ndarray:
     xf = x.astype(jnp.float32)

@@ -102,3 +102,95 @@ def topk_pallas(
         interpret=interpret,
     )(queries, database)
     return scores[:qn], idx[:qn]
+
+
+# ===========================================================================
+# Masked multi-partition merge
+# ===========================================================================
+#
+# After per-partition search, each partition holds a (Q, k) scoreboard of
+# candidate scores + global chunk ids.  Fusing them on the host costs a
+# device->host round trip per retrieval batch; this kernel keeps the whole
+# merge on-device: grid (q_blocks, P), partition innermost, with the same
+# running-scoreboard-in-VMEM idiom as ``topk_pallas``.  The mask is
+# per (query, partition) — batched IVF probes each query's own ``nprobe``
+# clusters — so pruning masks scoreboard entries to NEG_INF instead of
+# changing the input shape, and one compiled kernel serves every probe set.
+
+def _merge_kernel(mask_ref, s_ref, i_ref, os_ref, oi_ref, s_scr, i_scr, *,
+                  k: int, num_parts: int):
+    jp = pl.program_id(1)
+
+    @pl.when(jp == 0)
+    def _init():
+        s_scr[...] = jnp.full_like(s_scr, NEG_INF)
+        i_scr[...] = jnp.full_like(i_scr, -1)
+
+    active = mask_ref[...] != 0                                     # (bq, 1)
+    s = jnp.where(active, s_ref[...].astype(jnp.float32), NEG_INF)  # (bq, k)
+    cat_s = jnp.concatenate([s_scr[...], s], axis=1)                # (bq, 2k)
+    cat_i = jnp.concatenate([i_scr[...], i_ref[...]], axis=1)
+    new_s, pos = jax.lax.top_k(cat_s, k)
+    s_scr[...] = new_s
+    i_scr[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+
+    @pl.when(jp == num_parts - 1)
+    def _finalize():
+        os_ref[...] = s_scr[...]
+        oi_ref[...] = i_scr[...]
+
+
+def topk_merge_pallas(
+    part_scores: jnp.ndarray,   # (Q, P, k)
+    part_ids: jnp.ndarray,      # (Q, P, k) global chunk ids
+    mask: jnp.ndarray,          # (Q, P) bool/int — pruned entries are 0
+    k: int,
+    *,
+    block_q: int = 128,
+    interpret: bool = False,
+):
+    qn, num_parts, kk = part_scores.shape
+    assert part_ids.shape == part_scores.shape
+    assert mask.shape == (qn, num_parts), (mask.shape, qn, num_parts)
+    assert kk == k, (kk, k)
+    block_q = min(block_q, qn)
+    qpad = -qn % block_q
+    if qpad:
+        part_scores = jnp.pad(part_scores, ((0, qpad), (0, 0), (0, 0)),
+                              constant_values=NEG_INF)
+        part_ids = jnp.pad(part_ids, ((0, qpad), (0, 0), (0, 0)),
+                           constant_values=-1)
+        mask = jnp.pad(mask, ((0, qpad), (0, 0)))
+    nq = part_scores.shape[0] // block_q
+    # (Q, P, k) -> (Q, P*k) so each grid step views one (bq, k) tile
+    flat_s = part_scores.reshape(part_scores.shape[0], num_parts * k)
+    flat_i = part_ids.reshape(part_ids.shape[0], num_parts * k) \
+        .astype(jnp.int32)
+    mask_i = mask.astype(jnp.int32)
+
+    kernel = functools.partial(_merge_kernel, k=k, num_parts=num_parts)
+    scores, idx = pl.pallas_call(
+        kernel,
+        grid=(nq, num_parts),
+        in_specs=[
+            # (bq, 1) column of the per-query probe mask; lane dim 1 is
+            # fine — the compiler pads, and it's one int per query row
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((flat_s.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((flat_s.shape[0], k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(mask_i, flat_s, flat_i)
+    return scores[:qn], idx[:qn]

@@ -11,7 +11,18 @@ from __future__ import annotations
 import numpy as np
 
 import jax
-from jax.sharding import AxisType
+
+try:                                  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                   # pinned jax 0.4.x: implicit Auto axes
+    AxisType = None
+
+
+def _mesh(dev, axes):
+    if AxisType is None:
+        return jax.sharding.Mesh(dev, axes)
+    return jax.sharding.Mesh(dev, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,13 +36,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             f"BEFORE importing jax (launch/dryrun.py does this)")
     dev = np.asarray(devices[:n]).reshape(shape)
-    return jax.sharding.Mesh(dev, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(dev, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh from the first prod(shape) devices (tests)."""
     n = int(np.prod(shape))
     dev = np.asarray(jax.devices()[:n]).reshape(shape)
-    return jax.sharding.Mesh(dev, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(dev, axes)

@@ -1,5 +1,7 @@
 from repro.retrieval.embedding import HashEmbedder
-from repro.retrieval.vectorstore import Partition, VectorStore
+from repro.retrieval.vectorstore import Partition, SearchStats, VectorStore
 from repro.retrieval.cache import PartitionCache
+from repro.retrieval.streamer import PartitionStreamer
 
-__all__ = ["HashEmbedder", "Partition", "VectorStore", "PartitionCache"]
+__all__ = ["HashEmbedder", "Partition", "SearchStats", "VectorStore",
+           "PartitionCache", "PartitionStreamer"]

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
-from repro.sharding.specs import MeshContext
+from repro.sharding.specs import MeshContext, shard_map_compat
 
 
 def distributed_topk(
@@ -46,7 +46,7 @@ def distributed_topk(
         top_i = jnp.take_along_axis(i_cat, pos, axis=1)
         return top_s, top_i
 
-    return jax.shard_map(
+    return shard_map_compat(
         fn, mesh=ctx.mesh,
         in_specs=(P(None, None), P(axes, None)),
         out_specs=(P(None, None), P(None, None)),

@@ -1,0 +1,112 @@
+"""Asynchronous double-buffered partition streaming (paper §4.4 attack).
+
+Partition loading dominates retrieval cost, yet a pruned IVF sweep spends
+most of its wall clock *waiting* on ``np.load`` while the top-k kernel on
+the previously loaded partition has the CPU/accelerator idle.  The
+streamer overlaps the two: a background I/O thread reads the next
+non-resident partition(s) from disk while the caller searches the current
+one — the classic double buffer, generalized to a lookahead queue whose
+depth is governed by the same :class:`~repro.core.prefetch.PrefetchPolicy`
+budget accounting the LLM layer-prefetch queue uses (bounded by free host
+bytes / partition bytes, never less than one buffer ahead).
+
+Thread discipline: the worker only performs ``np.load`` and returns the
+array; all ``VectorStore`` mutation (installing embeddings, releasing
+after search) happens on the caller's thread, so results are bit-identical
+to the synchronous path.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.prefetch import PrefetchPolicy
+from repro.retrieval.vectorstore import SearchStats, VectorStore
+
+
+class PartitionStreamer:
+    """Background loader that feeds ``VectorStore.search`` sweeps."""
+
+    def __init__(self, store: VectorStore,
+                 policy: Optional[PrefetchPolicy] = None,
+                 free_bytes: float = float("inf")):
+        self.store = store
+        # double buffer by default: one partition in flight while one is
+        # being searched; a looser memory budget deepens the queue
+        self.policy = policy or PrefetchPolicy(max_depth=2, prefill_depth=1)
+        self.free_bytes = free_bytes
+        self._part_bytes: Optional[float] = None   # lazy, sizes are static
+        self._pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="partition-streamer")
+
+    # ------------------------------------------------------------- budget
+    def depth(self) -> int:
+        """Lookahead bound from the prefetch budget (>= 1 buffer ahead)."""
+        if self.free_bytes == float("inf"):
+            # unbounded budget: partition size is irrelevant, and
+            # store.partition_bytes() would stat every spilled .npy
+            return max(1, self.policy.depth("decode", self.free_bytes, 1.0))
+        if self._part_bytes is None:
+            try:
+                self._part_bytes = max(float(self.store.partition_bytes()),
+                                       1.0)
+            except ValueError:        # empty store
+                self._part_bytes = 1.0
+        return max(1, self.policy.depth("decode", self.free_bytes,
+                                        self._part_bytes))
+
+    # ------------------------------------------------------------- stream
+    def stream(self, pids: List[int],
+               stats: Optional[SearchStats] = None
+               ) -> Iterator[Tuple[int, bool]]:
+        """Yield ``(pid, loaded_here)`` in the given order.
+
+        By yield time the partition is resident; loads of later pids are
+        already in flight on the I/O thread.  ``loaded_here`` tells the
+        caller it owns the release (same contract as the sync path).
+        """
+        depth = self.depth()
+        inflight: Dict[int, Optional[Future]] = {}
+
+        def fetch(path: str):
+            t0 = time.perf_counter()
+            arr = np.load(path)
+            return arr, time.perf_counter() - t0
+
+        def ensure(idx: int) -> None:
+            if idx >= len(pids) or idx in inflight:
+                return
+            p = self.store.partitions[pids[idx]]
+            if p.resident:
+                inflight[idx] = None
+            else:
+                try:
+                    inflight[idx] = self._pool.submit(fetch, p.path)
+                except RuntimeError:    # closed streamer: degrade to sync
+                    inflight[idx] = None
+
+        for j in range(len(pids)):
+            # keep the queue full: current + `depth` lookahead
+            for ahead in range(j, min(j + depth + 1, len(pids))):
+                ensure(ahead)
+            fut = inflight.pop(j)
+            pid = pids[j]
+            p = self.store.partitions[pid]
+            if fut is None:
+                yield pid, False
+                continue
+            arr, dt = fut.result()
+            overlapped = p.resident       # raced with a concurrent load
+            if not overlapped:
+                p.embeddings = arr
+            if stats:
+                stats.partitions_loaded += 1
+                stats.prefetched += 1
+                stats.load_seconds += dt
+            yield pid, not overlapped
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False)

@@ -101,7 +101,11 @@ def _dot_flops(line: str, shapes: Dict[str, str]) -> float:
     ops = re.search(r"\(([^)]*)\)", line[line.index("dot("):])
     if not ops:
         return 0.0
-    names = re.findall(r"%?([\w.\-]+)", ops.group(1))
+    # operands print as "%name" or "f32[M,K]{1,0} %name" depending on the
+    # XLA version — prefer the %-prefixed names, fall back to bare tokens
+    names = re.findall(r"%([\w.\-]+)", ops.group(1))
+    if len(names) < 2:
+        names = re.findall(r"([\w.\-]+)", ops.group(1))
     if len(names) < 2:
         return 0.0
     lhs, rhs = names[0], names[1]

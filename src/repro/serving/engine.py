@@ -18,9 +18,11 @@ import numpy as np
 
 from repro.core.pipeline import Pipeline, StageQueue, build_pipeline
 from repro.core.placement import Placement, PlacementOptimizer
+from repro.core.prefetch import PrefetchPolicy
 from repro.core.scheduler import BacklogScheduler
 from repro.retrieval.cache import PartitionCache
 from repro.retrieval.embedding import HashEmbedder
+from repro.retrieval.streamer import PartitionStreamer
 from repro.retrieval.vectorstore import SearchStats, VectorStore
 from repro.serving.generator import Generator
 from repro.serving.request import Request
@@ -33,6 +35,7 @@ class PolicyEvent:
     resident_partitions: int
     c_gpu: float
     w_gpu: float
+    nprobe: Optional[int] = None
 
 
 class RagdollEngine:
@@ -41,7 +44,8 @@ class RagdollEngine:
                  ret_scheduler: BacklogScheduler,
                  gen_scheduler: BacklogScheduler,
                  optimizer: Optional[PlacementOptimizer] = None,
-                 initial_partitions: Optional[int] = None):
+                 initial_partitions: Optional[int] = None,
+                 streamer: Optional[PartitionStreamer] = None):
         self.store = store
         self.embedder = embedder
         self.generator = generator
@@ -49,7 +53,12 @@ class RagdollEngine:
         p0 = (initial_partitions if initial_partitions is not None
               else len(store.partitions))
         self.pcache = PartitionCache(store, target=p0)
+        self._owns_streamer = streamer is None
+        self.streamer = streamer if streamer is not None else \
+            PartitionStreamer(store, PrefetchPolicy(max_depth=2))
+        self.nprobe: Optional[int] = None   # set by the placement policy
         self.policy_trace: List[PolicyEvent] = []
+        self.retrieval_stats = SearchStats()   # cumulative, for reporting
         self.completed: List[Request] = []
         self._done_lock = threading.Lock()
         self.pipeline: Pipeline = build_pipeline(
@@ -63,9 +72,12 @@ class RagdollEngine:
     def _retrieve_batch(self, reqs: List[Request]) -> List[Request]:
         t0 = time.perf_counter()
         queries = self.embedder.embed([r.query for r in reqs])
-        # resident partitions answer from RAM; the rest stream from disk
-        stats = SearchStats()
-        scores, ids = self.store.search(queries, reqs[0].top_k, stats=stats)
+        # IVF probe prunes the sweep; resident partitions answer from RAM
+        # and the streamer double-buffers the remaining disk loads
+        stats = self.retrieval_stats
+        scores, ids = self.store.search(
+            queries, reqs[0].top_k, nprobe=self.nprobe,
+            streamer=self.streamer, stats=stats)
         chunks = self.store.get_chunks(ids)
         t1 = time.perf_counter()
         for r, ch in zip(reqs, chunks):
@@ -96,10 +108,12 @@ class RagdollEngine:
         b = max(self.gen_scheduler.choose_batch(max(backlog, 1)), 1)
         placement = self.opt.solve(b)
         self.pcache.set_target(placement.resident_partitions)
+        self.nprobe = placement.nprobe
         self.policy_trace.append(PolicyEvent(
             t=time.perf_counter(), gen_batch=b,
             resident_partitions=placement.resident_partitions,
-            c_gpu=placement.c_gpu, w_gpu=placement.w_gpu))
+            c_gpu=placement.c_gpu, w_gpu=placement.w_gpu,
+            nprobe=placement.nprobe))
 
     # ------------------------------------------------------------- public
     def start(self) -> None:
@@ -107,6 +121,8 @@ class RagdollEngine:
 
     def stop(self) -> None:
         self.pipeline.stop()
+        if self._owns_streamer:     # an injected streamer outlives us
+            self.streamer.close()
 
     def submit(self, req: Request) -> None:
         req.arrival = time.perf_counter() if req.arrival is None \

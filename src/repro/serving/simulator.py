@@ -112,7 +112,7 @@ class ServingSimulator:
                 self._placement_cache[-1] = ref
                 self._placement_cache[b] = Placement(
                     ref.w_gpu, ref.w_cpu, ref.c_gpu, ref.c_cpu,
-                    ref.resident_partitions, b)
+                    ref.resident_partitions, b, nprobe=ref.nprobe)
             else:
                 self._placement_cache[b] = self.opt.solve(b)
         return self._placement_cache[b]
@@ -146,8 +146,16 @@ class ServingSimulator:
                 t *= b / eff
         return t
 
-    def _ret_time(self, b: int, resident: int) -> float:
-        return self.cost.retrieval_time(b, resident)
+    def _ret_time(self, b: int, resident: int,
+                  nprobe: Optional[int] = None) -> float:
+        return self.cost.retrieval_time(b, resident, nprobe=nprobe)
+
+    def _nprobe(self, p: Placement) -> Optional[int]:
+        """Serial baselines (vLLMRAG/AccRAG) run the exact all-partition
+        sweep; only RAGDoll-family modes exercise the IVF probe knob."""
+        if self.sim.mode.startswith("serial"):
+            return None
+        return p.nprobe
 
     # --------------------------------------------------------------- run
     def run(self, arrivals: List[float]) -> SimResult:
@@ -182,7 +190,8 @@ class ServingSimulator:
                 b = min(b, s.max_batch)
             batch, queue = queue[:b], queue[b:]
             p = self._placement(len(batch))
-            t_ret = self._ret_time(len(batch), p.resident_partitions)
+            t_ret = self._ret_time(len(batch), p.resident_partitions,
+                                   self._nprobe(p))
             t_gen = self._gen_time(len(batch))
             for r in batch:
                 r.t_ret_start = now
@@ -197,7 +206,9 @@ class ServingSimulator:
             done.extend(batch)
             trace.append({"t": now, "batch": len(batch),
                           "P": p.resident_partitions, "c_gpu": p.c_gpu,
-                          "w_gpu": p.w_gpu})
+                          "w_gpu": p.w_gpu,
+                          "nprobe": self._nprobe(p)
+                          or self.cost.num_partitions})
         return SimResult(requests=done, policy_trace=trace,
                          gpu_busy=gpu_busy, cpu_busy=cpu_busy, horizon=now)
 
@@ -230,7 +241,8 @@ class ServingSimulator:
             batch = [ret_q.pop(0) for _ in range(take)]
             p = self._placement(self.gen_sched.choose_batch(
                 max(len(ctx_q), 1)) or 1)
-            dur = self._ret_time(len(batch), p.resident_partitions)
+            dur = self._ret_time(len(batch), p.resident_partitions,
+                                 self._nprobe(p))
             for r in batch:
                 r.t_ret_start = t
                 r.t_ret_end = t + dur
@@ -262,7 +274,9 @@ class ServingSimulator:
             gen_busy_flag = True
             trace.append({"t": t, "batch": len(batch),
                           "P": p.resident_partitions, "c_gpu": p.c_gpu,
-                          "w_gpu": p.w_gpu, "backlog": backlog})
+                          "w_gpu": p.w_gpu, "backlog": backlog,
+                          "nprobe": self._nprobe(p)
+                          or self.cost.num_partitions})
             heapq.heappush(ev, (t + dur, seq, "gen_done", batch))
             seq += 1
 

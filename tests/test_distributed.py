@@ -10,6 +10,9 @@ import textwrap
 
 import pytest
 
+# each test compiles in a fresh 8-device subprocess — tens of seconds
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -3,6 +3,7 @@ import tempfile
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")   # pinned in requirements.txt; skip, never collection-error
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

@@ -1,0 +1,182 @@
+"""IVF-pruned retrieval: clustering, probe recall, streamer, fused merge.
+
+Deliberately hypothesis-free so this module runs even where the property-
+test dependency is absent (the CI fast tier always runs it).
+"""
+import tempfile
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.retrieval import (HashEmbedder, PartitionStreamer, SearchStats,
+                             VectorStore)
+from repro.retrieval.synthetic import ArrayEmbedder, blob_corpus
+from repro.retrieval.vectorstore import kmeans_centroids
+
+
+@pytest.fixture
+def blob_store():
+    vecs = blob_corpus(n=1200, dim=32, clusters=8, seed=3)
+    emb = ArrayEmbedder(vecs)
+    with tempfile.TemporaryDirectory() as root:
+        store = VectorStore.build([str(i) for i in range(len(vecs))], emb,
+                                  num_partitions=8, root=root, seed=3)
+        yield store, vecs
+
+
+# ---------------------------------------------------------------- clustering
+
+def test_kmeans_partitions_cover_corpus_and_are_nonempty(blob_store):
+    store, vecs = blob_store
+    all_ids = np.concatenate([store.partitions[p].doc_ids
+                              for p in range(store.num_partitions)])
+    assert sorted(all_ids) == list(range(len(vecs)))
+    assert all(len(store.partitions[p].doc_ids) > 0
+               for p in range(store.num_partitions))
+    assert store.centroids.shape == (store.num_partitions, store.dim)
+    # centroids are unit-norm (cosine ranking assumes it)
+    np.testing.assert_allclose(np.linalg.norm(store.centroids, axis=1),
+                               1.0, atol=1e-5)
+
+
+def test_kmeans_reseeds_empty_clusters():
+    # more clusters than natural blobs: every cluster must still own points
+    vecs = blob_corpus(n=64, dim=16, clusters=2, seed=0)
+    cent, assign = kmeans_centroids(vecs, k=8, iters=5, seed=0)
+    assert cent.shape[0] == 8
+    assert set(range(8)) == set(np.unique(assign))
+
+
+# ------------------------------------------------------------------- probing
+
+def test_probe_is_per_query(blob_store):
+    store, vecs = blob_store
+    q = vecs[[0, 500, 900]]
+    pids, qmask = store.probe(q, nprobe=2)
+    assert qmask.shape == (3, store.num_partitions)
+    assert (qmask.sum(axis=1) == 2).all()        # each query probes 2
+    # the sweep visits exactly the probed union
+    assert set(pids) == set(np.nonzero(qmask.any(axis=0))[0])
+
+
+def test_pruned_search_recall_meets_threshold(blob_store):
+    store, vecs = blob_store
+    rng = np.random.default_rng(7)
+    q = vecs[rng.integers(0, len(vecs), size=6)] \
+        + (0.2 / np.sqrt(32)) * rng.normal(size=(6, 32))
+    q = (q / np.linalg.norm(q, axis=1, keepdims=True)).astype(np.float32)
+    top_k = 10
+    _, exact = store.search(q, top_k)
+    stats = SearchStats()
+    _, pruned = store.search(q, top_k, nprobe=2, stats=stats)
+    recall = np.mean([len(set(a) & set(b)) / top_k
+                      for a, b in zip(pruned, exact)])
+    assert recall >= 0.9, recall
+    assert stats.partitions_pruned > 0
+
+
+def test_pruned_search_loads_fewer_partitions(blob_store):
+    store, vecs = blob_store
+    for pid in range(store.num_partitions):
+        store.spill(pid)
+    q = vecs[[17]]
+    exact_stats, ivf_stats = SearchStats(), SearchStats()
+    store.search(q, 5, stats=exact_stats)
+    store.search(q, 5, nprobe=2, stats=ivf_stats)
+    assert exact_stats.partitions_loaded == store.num_partitions
+    assert ivf_stats.partitions_loaded == 2
+    assert ivf_stats.partitions_searched == 2
+
+
+def test_exact_search_unaffected_by_clustered_layout(blob_store):
+    store, vecs = blob_store
+    q = vecs[[3, 77]]
+    s, ids = store.search(q, top_k=9)
+    ws, wi = ref.topk_reference(jnp.asarray(q), jnp.asarray(vecs), 9)
+    assert (np.asarray(wi) == ids).all()
+    np.testing.assert_allclose(np.asarray(ws), s, atol=1e-4)
+
+
+# ------------------------------------------------------------------ streamer
+
+def test_streamer_results_identical_to_sync(blob_store):
+    store, vecs = blob_store
+    for pid in range(store.num_partitions):
+        store.spill(pid)
+    q = vecs[[10, 400, 800]]
+    for nprobe in (None, 3):
+        s_sync, i_sync = store.search(q, 8, nprobe=nprobe)
+        streamer = PartitionStreamer(store)
+        stats = SearchStats()
+        s_async, i_async = store.search(q, 8, nprobe=nprobe,
+                                        streamer=streamer, stats=stats)
+        streamer.close()
+        np.testing.assert_array_equal(i_sync, i_async)
+        np.testing.assert_allclose(s_sync, s_async)
+        assert stats.prefetched == stats.partitions_loaded > 0
+        # sweep left residency untouched (everything released again)
+        assert store.resident_set() == []
+
+
+def test_streamer_depth_respects_memory_budget(blob_store):
+    store, _ = blob_store
+    from repro.core.prefetch import PrefetchPolicy
+    part = store.partition_bytes()
+    tight = PartitionStreamer(store, PrefetchPolicy(max_depth=8),
+                              free_bytes=part * 1.5)
+    loose = PartitionStreamer(store, PrefetchPolicy(max_depth=8),
+                              free_bytes=float("inf"))
+    assert tight.depth() == 1
+    assert loose.depth() == 8
+    tight.close()
+    loose.close()
+
+
+# ---------------------------------------------------------------- merge path
+
+def test_masked_merge_matches_reference_all_impls():
+    rng = np.random.default_rng(0)
+    Q, P, k = 5, 7, 6
+    s = -np.sort(-rng.normal(size=(Q, P, k)).astype(np.float32), axis=-1)
+    i = rng.integers(0, 10_000, size=(Q, P, k)).astype(np.int32)
+    mask = rng.random((Q, P)) > 0.4
+    ws, wi = ref.topk_merge_reference(jnp.asarray(s), jnp.asarray(i),
+                                      jnp.asarray(mask), k)
+    for impl in ("blocked", "pallas", "naive"):
+        gs, gi = ops.retrieval_topk_merge(jnp.asarray(s), jnp.asarray(i),
+                                          jnp.asarray(mask), k, impl=impl)
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(ws),
+                                   atol=1e-6, err_msg=impl)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi),
+                                      err_msg=impl)
+
+
+def test_masked_merge_never_leaks_pruned_ids():
+    rng = np.random.default_rng(1)
+    Q, P, k = 4, 6, 5
+    s = rng.normal(size=(Q, P, k)).astype(np.float32)
+    # partition 0 has by far the best scores but is pruned for query 0
+    s[0, 0] += 100.0
+    i = np.arange(Q * P * k, dtype=np.int32).reshape(Q, P, k)
+    mask = np.ones((Q, P), bool)
+    mask[0, 0] = False
+    _, gi = ops.retrieval_topk_merge(jnp.asarray(s), jnp.asarray(i),
+                                     jnp.asarray(mask), k, impl="pallas")
+    banned = set(i[0, 0])
+    assert not (set(np.asarray(gi)[0]) & banned)
+
+
+def test_nprobe_is_a_placement_dimension():
+    from repro.configs import get_config
+    from repro.core.costmodel import GB, PF_HIGH, CostModel, ModelProfile
+    from repro.core.placement import PlacementOptimizer
+    mp = ModelProfile.from_config(get_config("llama3-70b"))
+    cm = CostModel(PF_HIGH, mp, partition_bytes=8 * GB, num_partitions=32)
+    opt = PlacementOptimizer(cm, avg_ctx_len=512, avg_out_len=32)
+    p = opt.solve(16)
+    assert p.nprobe is not None and 1 <= p.nprobe <= 32
+    # probing fewer clusters can only speed retrieval up
+    ts = [cm.retrieval_time(16, 8, nprobe=n) for n in (8, 16, 32, None)]
+    assert ts[0] <= ts[1] <= ts[2] == ts[3]

@@ -2,6 +2,9 @@
 import threading
 import time
 
+import pytest
+
+pytest.importorskip("hypothesis")   # pinned in requirements.txt; skip, never collection-error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pipeline import StageQueue, build_pipeline

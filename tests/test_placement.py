@@ -2,6 +2,7 @@
 import dataclasses
 
 import pytest
+pytest.importorskip("hypothesis")   # pinned in requirements.txt; skip, never collection-error
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

@@ -2,6 +2,7 @@
 import math
 
 import pytest
+pytest.importorskip("hypothesis")   # pinned in requirements.txt; skip, never collection-error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.scheduler import (BacklogScheduler, batch_avg_latency,

@@ -31,6 +31,7 @@ def _mini_system(streamed=False):
     return gen, emb, texts
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("streamed", [False, True])
 def test_ragdoll_engine_end_to_end(streamed):
     gen, emb, texts = _mini_system(streamed)
@@ -59,6 +60,7 @@ def test_ragdoll_engine_end_to_end(streamed):
     assert tab["n"] == n and np.isfinite(tab["avg_latency"])
 
 
+@pytest.mark.slow
 def test_serial_engine_end_to_end():
     gen, emb, texts = _mini_system()
     with tempfile.TemporaryDirectory() as root:

@@ -1,6 +1,9 @@
 """Mamba2 SSD: chunked scan == sequential recurrence (the SSM invariant)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")   # pinned in requirements.txt; skip, never collection-error
 from hypothesis import given, settings, strategies as st
 
 from repro.models.ssm import ssd_chunked, ssd_step

@@ -8,8 +8,12 @@ import tempfile
 import time
 
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
+
+# real model init + threaded end-to-end serving — the slow tier
+pytestmark = pytest.mark.slow
 
 from repro.configs import get_config
 from repro.core.prefetch import PrefetchPolicy, StreamedExecutor

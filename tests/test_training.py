@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")   # pinned in requirements.txt; skip, never collection-error
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
