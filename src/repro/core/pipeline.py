@@ -127,6 +127,71 @@ class PipelineWorker(threading.Thread):
                 self.out_queue.put_many(outputs)
 
 
+class StepPumpWorker(threading.Thread):
+    """Iteration-level pipeline stage (continuous batching).
+
+    Instead of popping a whole batch and blocking until it drains, the
+    pump admits items from ``in_queue`` whenever ``capacity_fn()`` reports
+    free slots, runs one decode step via ``step_fn()`` (which returns the
+    items that finished *this step*), and forwards them immediately.  The
+    lazy-reconfiguration hook ``on_policy_boundary`` runs every
+    ``policy_every`` steps — the paper's dynamic batch policy acting
+    *within* a generation rather than only between whole batches.
+    """
+
+    def __init__(self, name: str, in_queue: StageQueue,
+                 out_queue: Optional[StageQueue],
+                 capacity_fn: Callable[[], int],
+                 admit_fn: Callable[[List[Any]], None],
+                 step_fn: Callable[[], Optional[List[Any]]],
+                 on_policy_boundary: Optional[Callable[[], None]] = None,
+                 policy_every: int = 8,
+                 idle_wait: float = 0.01):
+        super().__init__(name=name, daemon=True)
+        self.in_queue = in_queue
+        self.out_queue = out_queue
+        self.capacity_fn = capacity_fn
+        self.admit_fn = admit_fn
+        self.step_fn = step_fn
+        self.on_policy_boundary = on_policy_boundary
+        self.policy_every = max(policy_every, 1)
+        self.idle_wait = idle_wait
+        self.stats = WorkerStats()
+        self._stop_event = threading.Event()    # see PipelineWorker note
+        self._lock = threading.Lock()
+        self._steps = 0
+
+    def stop(self) -> None:
+        self._stop_event.set()
+
+    def run(self) -> None:
+        while not self._stop_event.is_set():
+            free = self.capacity_fn()
+            items = self.in_queue.pop_batch(free) if free > 0 else []
+            t0 = time.perf_counter()
+            with self._lock:
+                if items:
+                    self.admit_fn(items)
+                outputs = self.step_fn()
+            dt = time.perf_counter() - t0
+            if outputs is None and not items:   # no live slots: sleep
+                self.in_queue.wait(self.idle_wait)
+                continue
+            self._steps += 1
+            if (self.on_policy_boundary is not None
+                    and self._steps % self.policy_every == 0):
+                self.on_policy_boundary()
+            self.stats.batches += 1
+            self.stats.busy_seconds += dt
+            if outputs:
+                self.stats.items += len(outputs)
+                self.stats.batch_log.append(
+                    {"t": time.perf_counter(), "batch": len(outputs),
+                     "seconds": dt, "backlog": len(self.in_queue)})
+                if self.out_queue is not None:
+                    self.out_queue.put_many(outputs)
+
+
 @dataclass
 class Pipeline:
     """The two-stage RAGDoll pipeline wiring."""

@@ -20,6 +20,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer
@@ -149,8 +150,21 @@ class StreamedExecutor:
         logits = transformer.unembed(self.top, cfg, x, None)[:, 0]
         return logits, new_caches
 
-    def decode(self, inputs, caches: List[dict], pos):
+    def decode(self, inputs, caches: List[dict], pos, slot_mask=None):
+        """One decode step; ``slot_mask`` (B,) marks live slot rows.
+
+        A step where *no* slot is live short-circuits before ``_stream``:
+        the offloaded layers are not re-streamed host->device just to
+        decode garbage for a drained slot table.  Dead rows in a mixed
+        step still ride the batched compute — their cache writes are
+        row-independent garbage that the next join's full-row scatter
+        overwrites, so masking them per leaf would be pure overhead on
+        the hot decode path.
+        """
         cfg = self.cfg
+        if slot_mask is not None \
+                and not np.asarray(slot_mask).astype(bool).any():
+            return jnp.zeros((inputs.shape[0], cfg.vocab_size)), caches
         x = transformer._embed_inputs(self.top, cfg, inputs)
         x, new_caches = self._stream(x, caches, pos, "decode")
         from repro.models import layers as L

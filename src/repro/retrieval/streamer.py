@@ -38,9 +38,17 @@ class PartitionStreamer:
         # being searched; a looser memory budget deepens the queue
         self.policy = policy or PrefetchPolicy(max_depth=2, prefill_depth=1)
         self.free_bytes = free_bytes
+        self.last_depth: Optional[int] = None   # depth used most recently
         self._part_bytes: Optional[float] = None   # lazy, sizes are static
         self._pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="partition-streamer")
+
+    def set_budget(self, free_bytes: float) -> None:
+        """Retarget the lookahead budget from the live placement's host
+        headroom (called at policy boundaries; takes effect immediately,
+        including for sweeps already in flight — ``stream`` re-derives the
+        depth every iteration)."""
+        self.free_bytes = free_bytes
 
     # ------------------------------------------------------------- budget
     def depth(self) -> int:
@@ -68,7 +76,6 @@ class PartitionStreamer:
         already in flight on the I/O thread.  ``loaded_here`` tells the
         caller it owns the release (same contract as the sync path).
         """
-        depth = self.depth()
         inflight: Dict[int, Optional[Future]] = {}
 
         def fetch(path: str):
@@ -89,7 +96,10 @@ class PartitionStreamer:
                     inflight[idx] = None
 
         for j in range(len(pids)):
-            # keep the queue full: current + `depth` lookahead
+            # keep the queue full: current + `depth` lookahead; the depth
+            # is re-derived every iteration so a placement change (via
+            # ``set_budget``) resizes the lookahead mid-sweep
+            depth = self.last_depth = self.depth()
             for ahead in range(j, min(j + depth + 1, len(pids))):
                 ensure(ahead)
             fut = inflight.pop(j)

@@ -1,8 +1,12 @@
 from repro.serving.request import Request, latency_table, percentile
 from repro.serving.engine import RagdollEngine, SerialRAGEngine
+from repro.serving.generator import (ContinuousGenerator, Generator,
+                                     GeneratorConfig, SlotRef, SlotTable,
+                                     StaleSlotError)
 from repro.serving.simulator import (ServingSimulator, SimConfig,
                                      poisson_workload)
 
 __all__ = ["Request", "latency_table", "percentile", "RagdollEngine",
            "SerialRAGEngine", "ServingSimulator", "SimConfig",
-           "poisson_workload"]
+           "poisson_workload", "Generator", "GeneratorConfig",
+           "ContinuousGenerator", "SlotTable", "SlotRef", "StaleSlotError"]

@@ -2,7 +2,10 @@
 
 Each entry returns a configured ``ServingSimulator`` for one row of the
 evaluation: the serial vLLMRAG / AccRAG baselines and the Table 2
-ablations of RAGDoll's own components.
+ablations of RAGDoll's own components.  Only the "ragdoll" mode uses
+continuous decode-step batching; the serial baselines and ablations keep
+whole-batch semantics so Fig. 9 / benchmark comparisons are like-for-like
+(pass ``continuous=False`` to get the whole-batch ragdoll variant).
 """
 from __future__ import annotations
 

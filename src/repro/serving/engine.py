@@ -4,6 +4,19 @@
 pipelines, backlog-aware batch schedulers per stage, partition cache
 driven by the joint placement policy, and policy-trace recording (Fig. 9).
 
+The generation stage has two disciplines, chosen by the generator type:
+
+* a whole-batch :class:`~repro.serving.generator.Generator` runs behind a
+  classic ``PipelineWorker`` (pop batch, generate, forward);
+* a :class:`~repro.serving.generator.ContinuousGenerator` runs behind a
+  ``StepPumpWorker`` — requests are admitted into free KV slots at any
+  decode step and leave the moment they finish, and the placement
+  optimizer's batch policy is consulted every ``policy_every`` decode
+  steps (mid-generation, the paper's Fig. 9 behaviour) instead of only at
+  whole-batch boundaries.  The policy boundary also retargets the
+  partition cache, the IVF probe width, and the partition streamer's
+  host-memory budget from the live placement.
+
 ``SerialRAGEngine`` is the baseline shape (vLLMRAG/AccRAG-style): one
 worker retrieves then generates per batch, in arrival order.
 """
@@ -16,7 +29,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.pipeline import Pipeline, StageQueue, build_pipeline
+from repro.core.pipeline import (Pipeline, PipelineWorker, StageQueue,
+                                 StepPumpWorker, build_pipeline)
 from repro.core.placement import Placement, PlacementOptimizer
 from repro.core.prefetch import PrefetchPolicy
 from repro.core.scheduler import BacklogScheduler
@@ -24,7 +38,7 @@ from repro.retrieval.cache import PartitionCache
 from repro.retrieval.embedding import HashEmbedder
 from repro.retrieval.streamer import PartitionStreamer
 from repro.retrieval.vectorstore import SearchStats, VectorStore
-from repro.serving.generator import Generator
+from repro.serving.generator import ContinuousGenerator, Generator
 from repro.serving.request import Request
 
 
@@ -45,10 +59,13 @@ class RagdollEngine:
                  gen_scheduler: BacklogScheduler,
                  optimizer: Optional[PlacementOptimizer] = None,
                  initial_partitions: Optional[int] = None,
-                 streamer: Optional[PartitionStreamer] = None):
+                 streamer: Optional[PartitionStreamer] = None,
+                 policy_every: int = 8):
         self.store = store
         self.embedder = embedder
         self.generator = generator
+        self.continuous = isinstance(generator, ContinuousGenerator)
+        self.policy_every = policy_every
         self.opt = optimizer
         p0 = (initial_partitions if initial_partitions is not None
               else len(store.partitions))
@@ -61,11 +78,26 @@ class RagdollEngine:
         self.retrieval_stats = SearchStats()   # cumulative, for reporting
         self.completed: List[Request] = []
         self._done_lock = threading.Lock()
-        self.pipeline: Pipeline = build_pipeline(
-            self._retrieve_batch, self._generate_batch,
-            ret_scheduler, gen_scheduler,
-            on_ret_boundary=self._ret_boundary,
-            on_gen_boundary=self._gen_boundary)
+        if self.continuous:
+            rq, cq, dq = (StageQueue("retrieval"), StageQueue("context"),
+                          StageQueue("done"))
+            rw = PipelineWorker("retrieval", rq, cq, self._retrieve_batch,
+                                ret_scheduler,
+                                on_batch_boundary=self._ret_boundary)
+            gw = StepPumpWorker(
+                "generation", cq, dq,
+                capacity_fn=lambda: self.generator.free_slots,
+                admit_fn=self._admit_requests, step_fn=self._generate_step,
+                on_policy_boundary=self._gen_boundary,
+                policy_every=policy_every)
+            self.pipeline = Pipeline(retrieval_queue=rq, context_queue=cq,
+                                     done_queue=dq, workers=[rw, gw])
+        else:
+            self.pipeline = build_pipeline(
+                self._retrieve_batch, self._generate_batch,
+                ret_scheduler, gen_scheduler,
+                on_ret_boundary=self._ret_boundary,
+                on_gen_boundary=self._gen_boundary)
         self.gen_scheduler = gen_scheduler
 
     # ------------------------------------------------------------- stages
@@ -97,6 +129,39 @@ class RagdollEngine:
             self.completed.extend(reqs)
         return reqs
 
+    # --------------------------------------- continuous generation stage
+    def _admit_requests(self, reqs: List[Request]) -> None:
+        """Prefill arrivals into free KV slots (join at any decode step)."""
+        t = time.perf_counter()
+        for r in reqs:
+            ref = self.generator.join(r, r.prompt, r.max_new_tokens)
+            assert ref is not None, "admitted past slot capacity"
+            r.t_gen_start = t
+
+    def _generate_step(self) -> Optional[List[Request]]:
+        """One decode step over the slot table; returns rows that left."""
+        t0 = time.perf_counter()
+        stepped = self.generator.step()
+        finished = self.generator.harvest()
+        if not stepped and not finished:
+            return None            # idle: no live slots
+        t = time.perf_counter()
+        if stepped:
+            # feed the backlog scheduler per-step samples (batch = live
+            # slots).  The power-law argmin is timescale-invariant, so
+            # per-step durations steer choose_batch exactly like the
+            # whole-batch samples PipelineWorker.observe() would
+            self.gen_scheduler.observe(stepped, t - t0)
+        done: List[Request] = []
+        for req, text, _tokens in finished:
+            req.output = text
+            req.t_gen_end = t
+            done.append(req)
+        if done:
+            with self._done_lock:
+                self.completed.extend(done)
+        return done
+
     # ---------------------------------------------- lazy reconfiguration
     def _ret_boundary(self) -> None:
         pass  # partition target applied by _gen_boundary's placement
@@ -105,10 +170,21 @@ class RagdollEngine:
         if self.opt is None:
             return
         backlog = len(self.pipeline.context_queue)
+        if self.continuous:
+            # requests already decoding in slots are part of the live
+            # batch the placement must provision for (mirrors the
+            # simulator's step-level policy consult)
+            backlog += self.generator.active_slots
         b = max(self.gen_scheduler.choose_batch(max(backlog, 1)), 1)
         placement = self.opt.solve(b)
         self.pcache.set_target(placement.resident_partitions)
         self.nprobe = placement.nprobe
+        # couple the partition streamer's lookahead to the host memory the
+        # live placement leaves free (ROADMAP: streamer depth feedback)
+        hw = self.opt.cost.hw
+        host_free = (hw.cpu_mem * hw.mem_headroom
+                     - self.opt.memory_use(placement).cpu)
+        self.streamer.set_budget(max(host_free, 0.0))
         self.policy_trace.append(PolicyEvent(
             t=time.perf_counter(), gen_batch=b,
             resident_partitions=placement.resident_partitions,

@@ -1,16 +1,40 @@
-"""Batched greedy generation worker for the real (mini) engine.
+"""Generation workers for the real (mini) engine: whole-batch + continuous.
 
 A deterministic hash tokenizer keeps the substrate self-contained; prompts
-are padded/truncated to a fixed context length so a whole batch prefills
-together, then decodes step-by-step (greedy) with the KV caches.  The
-model path is either the scan-based ``Model`` or the offloading
-``StreamedExecutor`` (the paper's prefetch-queue engine).
+are padded/truncated to a fixed context length.  The model path is either
+the scan-based ``Model`` or the offloading ``StreamedExecutor`` (the
+paper's prefetch-queue engine).
+
+Two execution disciplines share that substrate:
+
+``Generator``
+    The classic whole-batch loop (prefill the batch together, decode it
+    together, return when every row is done).  Kept for the serial
+    baselines so Fig. 9 / benchmark comparisons stay like-for-like.
+
+``ContinuousGenerator``
+    Orca/vLLM-style iteration-level scheduling over a fixed-capacity
+    **slot table**.  Each slot owns one row of the batched KV caches plus
+    per-slot position / last-token / budget state.  Requests ``join`` at
+    any decode step (a batch=1 prefill is scattered into a free slot's
+    cache row), every ``step`` advances all live slots one token, and
+    ``harvest`` returns rows the moment they emit EOS or exhaust their
+    token budget — the freed slot is immediately reusable.  Slot rows are
+    fully overwritten on join, so a recycled slot can never serve a stale
+    KV cache; per-row decode is batch-size invariant on this backend, so
+    outputs are token-identical to the whole-batch path (see
+    ``tests/test_continuous.py``).
+
+Slot lifecycle::
+
+    free --acquire--> active --step*--> finished --harvest--> free
+                       (epoch bumped on release; stale SlotRefs raise)
 """
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,10 +69,20 @@ class GeneratorConfig:
     ctx_len: int = 64
     max_new_tokens: int = 16
     dtype: object = jnp.float32
+    eos_id: Optional[int] = None   # None: always decode max_new_tokens
 
 
-class Generator:
-    """Prefill + greedy decode over a fixed-context batch."""
+def _trim_at_eos(tokens: List[int], eos_id: Optional[int]) -> List[int]:
+    if eos_id is None:
+        return tokens
+    for j, t in enumerate(tokens):
+        if t == eos_id:
+            return tokens[:j + 1]
+    return tokens
+
+
+class _GeneratorBase:
+    """Shared model/tokenizer substrate for both batching disciplines."""
 
     def __init__(self, cfg: ModelConfig, params, gen_cfg: GeneratorConfig,
                  streamed: bool = False,
@@ -63,10 +97,15 @@ class Generator:
             self.model = None
             self.params = None
         else:
+            self.exec = None
             self.model = Model(cfg, remat=False)
             self.params = params
             self._prefill = jax.jit(self.model.prefill)
             self._decode = jax.jit(self.model.decode, donate_argnums=(2,))
+
+
+class Generator(_GeneratorBase):
+    """Whole-batch prefill + greedy decode over a fixed-context batch."""
 
     def generate(self, prompts: List[str]) -> List[str]:
         g = self.gen_cfg
@@ -92,4 +131,269 @@ class Generator:
             cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             outs.append(np.asarray(cur)[:, 0])
         mat = np.stack(outs, axis=1)     # (B, new)
-        return [self.tok.decode(row) for row in mat]
+        return [self.tok.decode(_trim_at_eos([int(t) for t in row],
+                                             g.eos_id))
+                for row in mat]
+
+
+# ---------------------------------------------------------------------------
+# slot table (pure bookkeeping — no JAX; property-tested in test_slots.py)
+# ---------------------------------------------------------------------------
+
+class StaleSlotError(RuntimeError):
+    """A SlotRef outlived its slot's lease (the slot was recycled)."""
+
+
+@dataclass
+class SlotState:
+    key: Any                      # caller's request handle
+    pos: int                      # absolute position: ctx_len + emitted
+    remaining: int                # decode steps left in the token budget
+    tokens: List[int] = field(default_factory=list)
+
+
+@dataclass(frozen=True)
+class SlotRef:
+    """Capability to one lease of one slot: (index, epoch) pair."""
+    index: int
+    epoch: int
+
+
+class SlotTable:
+    """Fixed-capacity slot allocator with per-slot lease epochs.
+
+    ``acquire`` leases the lowest free slot; ``release`` bumps the slot's
+    epoch so any retained :class:`SlotRef` from the previous lease raises
+    :class:`StaleSlotError` instead of silently touching a recycled
+    slot's KV row.  Invariants (property-tested): free + active partition
+    the capacity; a key's position is strictly monotone while leased.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self._epochs: List[int] = [0] * capacity
+        self._active: Dict[int, SlotState] = {}
+
+    # ------------------------------------------------------------ queries
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_slots(self) -> int:
+        return len(self._active)
+
+    def active_refs(self) -> List[SlotRef]:
+        return [SlotRef(i, self._epochs[i]) for i in sorted(self._active)]
+
+    def mask(self) -> np.ndarray:
+        m = np.zeros(self.capacity, bool)
+        for i in self._active:
+            m[i] = True
+        return m
+
+    def state(self, ref: SlotRef) -> SlotState:
+        self._check(ref)
+        return self._active[ref.index]
+
+    def _check(self, ref: SlotRef) -> None:
+        if (ref.index not in self._active
+                or self._epochs[ref.index] != ref.epoch):
+            raise StaleSlotError(f"slot {ref.index} epoch {ref.epoch} "
+                                 f"is not the live lease")
+
+    # ---------------------------------------------------------- lifecycle
+    def acquire(self, key: Any, pos: int, remaining: int
+                ) -> Optional[SlotRef]:
+        """Lease a free slot, or None when the table is full."""
+        if not self._free:
+            return None
+        idx = self._free.pop()
+        self._active[idx] = SlotState(key=key, pos=pos, remaining=remaining)
+        return SlotRef(idx, self._epochs[idx])
+
+    def advance(self, ref: SlotRef, token: int) -> SlotState:
+        """Record one decode step for a live slot (position +1)."""
+        self._check(ref)
+        st = self._active[ref.index]
+        st.tokens.append(int(token))
+        st.pos += 1
+        st.remaining -= 1
+        return st
+
+    def release(self, ref: SlotRef) -> SlotState:
+        """End the lease: bump the epoch, return the slot to the free list."""
+        self._check(ref)
+        st = self._active.pop(ref.index)
+        self._epochs[ref.index] += 1
+        self._free.append(ref.index)
+        return st
+
+
+# ---------------------------------------------------------------------------
+# continuous (iteration-level) generator
+# ---------------------------------------------------------------------------
+
+class ContinuousGenerator(_GeneratorBase):
+    """Decode-step batching: requests join/leave a persistent slot table.
+
+    The KV caches are allocated once for ``num_slots`` rows; ``join``
+    prefills a request at batch=1 and scatters the resulting cache row
+    into a free slot, ``step`` advances every live slot one greedy token,
+    and ``harvest`` drains rows that emitted EOS or exhausted their
+    budget.  Dead slots keep riding the batched decode (their rows are
+    row-independent garbage, fully overwritten on the next join); on the
+    streamed path the slot-validity mask is forwarded so an all-dead step
+    never re-streams offloaded layers.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, gen_cfg: GeneratorConfig,
+                 num_slots: int = 4, streamed: bool = False,
+                 policy: Optional[PrefetchPolicy] = None):
+        super().__init__(cfg, params, gen_cfg, streamed=streamed,
+                         policy=policy)
+        self.num_slots = num_slots
+        self.table = SlotTable(num_slots)
+        total = gen_cfg.ctx_len + gen_cfg.max_new_tokens
+        self._total = total
+        if streamed:
+            self.caches = self.exec.init_caches(num_slots, total,
+                                                gen_cfg.dtype)
+        else:
+            self.cache = init_cache(cfg, num_slots, total, gen_cfg.dtype)
+        # host-side per-slot scalars (tiny; converted per step)
+        self._cur = np.zeros(num_slots, np.int32)
+        self._pos = np.zeros(num_slots, np.int32)
+        self._finished: List[Tuple[Any, str, List[int]]] = []
+        self.steps = 0
+
+    # ------------------------------------------------------------ helpers
+    @property
+    def free_slots(self) -> int:
+        return self.table.free_slots
+
+    @property
+    def active_slots(self) -> int:
+        return self.table.active_slots
+
+    def _scatter_row(self, row_cache, slot: int) -> None:
+        """Overwrite slot ``slot``'s KV row with a batch=1 cache."""
+        if self.streamed:
+            # per-layer list of dicts, leaves (1, ...) -> (S, ...)
+            self.caches = [
+                jax.tree.map(lambda t, r: t.at[slot].set(r[0]), tc, rc)
+                for tc, rc in zip(self.caches, row_cache)]
+        else:
+            # stacked layout: "blocks" leaves are (reps, B, ...),
+            # "prefix" leaves are (B, ...)
+            new = dict(self.cache)
+            new["blocks"] = jax.tree.map(
+                lambda t, r: t.at[:, slot].set(r[:, 0]),
+                self.cache["blocks"], row_cache["blocks"])
+            if "prefix" in self.cache:
+                new["prefix"] = jax.tree.map(
+                    lambda t, r: t.at[slot].set(r[0]),
+                    self.cache["prefix"], row_cache["prefix"])
+            self.cache = new
+
+    def _emit(self, ref: SlotRef, token: int) -> None:
+        """Append one token; finish + free the slot on EOS / budget end."""
+        st = self.table.advance(ref, token)
+        self._cur[ref.index] = token
+        # st.pos counts ctx_len + emitted tokens; the emitted token is
+        # *pending* its KV write, so the next decode call runs at pos-1
+        self._pos[ref.index] = st.pos - 1
+        eos = self.gen_cfg.eos_id
+        if st.remaining <= 0 or (eos is not None and token == eos):
+            st = self.table.release(ref)
+            self._cur[ref.index] = 0
+            # park the dead slot's writes on its last position; the row is
+            # fully overwritten by the next join's scatter
+            self._finished.append(
+                (st.key, self.tok.decode(st.tokens), list(st.tokens)))
+
+    # ------------------------------------------------------------- public
+    def join(self, key: Any, prompt: str,
+             max_new_tokens: Optional[int] = None) -> Optional[SlotRef]:
+        """Prefill ``prompt`` into a free slot; None when the table is full.
+
+        The first token is emitted by the prefill itself (same as the
+        whole-batch loop), so a budget of 1 finishes without any step.
+        """
+        g = self.gen_cfg
+        req = g.max_new_tokens if max_new_tokens is None else max_new_tokens
+        # prefill always emits the first token, so the budget floor is 1
+        budget = max(1, min(req, g.max_new_tokens))
+        ref = self.table.acquire(key, pos=g.ctx_len, remaining=budget)
+        if ref is None:
+            return None
+        toks = jnp.asarray(self.tok.encode(prompt, g.ctx_len)[None])
+        if self.streamed:
+            row = self.exec.init_caches(1, self._total, g.dtype)
+            logits, row = self.exec.prefill(toks, row)
+        else:
+            row = init_cache(self.cfg, 1, self._total, g.dtype)
+            logits, row = self._prefill(self.params, toks, row)
+        self._scatter_row(row, ref.index)
+        self._emit(ref, int(np.asarray(jnp.argmax(logits, axis=-1))[0]))
+        return ref
+
+    def step(self) -> int:
+        """Advance every live slot one greedy decode step.
+
+        Returns the number of slots stepped (0 = idle, nothing ran).
+        """
+        refs = self.table.active_refs()
+        if not refs:
+            return 0
+        cur = jnp.asarray(self._cur)[:, None]
+        pos = jnp.asarray(self._pos)
+        if self.streamed:
+            mask = jnp.asarray(self.table.mask())
+            logits, self.caches = self.exec.decode(cur, self.caches, pos,
+                                                   slot_mask=mask)
+        else:
+            logits, self.cache = self._decode(self.params, cur, self.cache,
+                                              pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        for ref in refs:
+            self._emit(ref, int(nxt[ref.index]))
+        self.steps += 1
+        return len(refs)
+
+    def harvest(self) -> List[Tuple[Any, str, List[int]]]:
+        """Drain (key, text, tokens) for rows finished since last call."""
+        out, self._finished = self._finished, []
+        return out
+
+    def run(self, prompts: List[str],
+            schedule: Optional[Sequence[int]] = None) -> List[str]:
+        """Convenience driver: join everything (as slots free), pump, drain.
+
+        ``schedule[i]`` caps how many queued prompts may join before step
+        ``i`` (joins beyond the schedule are unthrottled) — used by the
+        equivalence tests to randomize join/leave interleavings.
+        """
+        pending = list(enumerate(prompts))[::-1]    # pop() = arrival order
+        results: List[Optional[str]] = [None] * len(prompts)
+        tick = 0
+        while pending or self.active_slots:
+            allow = len(pending)
+            if schedule is not None and tick < len(schedule):
+                allow = min(allow, schedule[tick])
+            joined = 0
+            while pending and joined < allow and self.free_slots:
+                key, prompt = pending.pop()
+                assert self.join(key, prompt) is not None
+                joined += 1
+            self.step()
+            for key, text, _ in self.harvest():
+                results[key] = text
+            tick += 1
+        for key, text, _ in self.harvest():
+            results[key] = text
+        assert all(r is not None for r in results)
+        return results     # type: ignore[return-value]

@@ -8,7 +8,12 @@ Only operation durations are synthetic; every scheduling/placement decision
 is produced by the production code paths.
 
 Modes
-  ragdoll            full system (pipelined, dynamic batch, joint placement)
+  ragdoll            full system (pipelined, dynamic batch, joint placement;
+                     continuous decode-step batching by default — requests
+                     join free KV slots at any decode step and leave the
+                     step they finish, mirroring the real engine's slot
+                     table; set ``continuous=False`` for the whole-batch
+                     variant used by the Fig. 9 sweep)
   no_pipeline        ablation: one worker, retrieval+generation share batches
   static_batch       ablation: fixed generation batch size
   flexgen_prefetch   ablation: next-layer-only prefetch (depth=1)
@@ -67,6 +72,11 @@ class SimConfig:
     depth_prefill: int = 1
     depth_decode: int = 8
     retrieval_max_batch: int = 128
+    # continuous decode-step batching (None: on for "ragdoll", off
+    # elsewhere — serial baselines keep whole-batch semantics so the
+    # benchmark comparisons stay like-for-like)
+    continuous: Optional[bool] = None
+    policy_every: int = 4          # decode steps between policy consults
 
 
 @dataclass
@@ -92,6 +102,8 @@ class ServingSimulator:
         self.cost = cost
         self.opt = opt
         self.sim = sim
+        self.continuous = (sim.mode == "ragdoll" if sim.continuous is None
+                           else sim.continuous)
         self._placement_cache: Dict[int, Placement] = {}
         # seed schedulers from "active profiling" over the cost model
         self.gen_sched = BacklogScheduler(max_batch=sim.max_batch)
@@ -164,6 +176,8 @@ class ServingSimulator:
                 for i, t in enumerate(arrivals)]
         if s.mode.startswith("serial") or s.mode == "no_pipeline":
             return self._run_serial(reqs)
+        if self.continuous:
+            return self._run_continuous(reqs)
         return self._run_pipeline(reqs)
 
     # serial baselines: one worker does retrieve-then-generate per batch
@@ -209,6 +223,111 @@ class ServingSimulator:
                           "w_gpu": p.w_gpu,
                           "nprobe": self._nprobe(p)
                           or self.cost.num_partitions})
+        return SimResult(requests=done, policy_trace=trace,
+                         gpu_busy=gpu_busy, cpu_busy=cpu_busy, horizon=now)
+
+    # continuous pipeline: retrieval worker + iteration-level decode pump
+    def _run_continuous(self, reqs: List[Request]) -> SimResult:
+        """Step-level join/leave: each event on the generation side is one
+        decode step of the live slot table, not one whole batch.  Arrivals
+        with retrieved context join free slots at the next step boundary
+        (paying a prefill for the joining group); finished requests leave
+        the step they emit their last token, freeing the slot immediately.
+        The placement/batch policy is consulted every ``policy_every``
+        steps, so capacity tracks the backlog *within* a generation."""
+        s = self.sim
+        n = len(reqs)
+        ret_q: List[Request] = []
+        ctx_q: List[Request] = []
+        done: List[Request] = []
+        trace: List[Dict[str, float]] = []
+        gpu_busy = cpu_busy = 0.0
+        ev: List = []
+        seq = 0
+        for r in reqs:
+            heapq.heappush(ev, (r.arrival, seq, "arrive", r))
+            seq += 1
+        ret_busy = gen_running = False
+        active: List[List] = []          # [request, tokens_remaining]
+        cap = {"b": 1, "p": self._placement(1), "steps": 0}
+        now = 0.0
+
+        def start_ret(t):
+            nonlocal seq, ret_busy, cpu_busy
+            if ret_busy or not ret_q:
+                return
+            b = self.ret_sched.choose_batch(len(ret_q))
+            if b <= 0:
+                return
+            batch = [ret_q.pop(0) for _ in range(min(b, len(ret_q)))]
+            p = cap["p"]
+            dur = self._ret_time(len(batch), p.resident_partitions,
+                                 self._nprobe(p))
+            for r in batch:
+                r.t_ret_start = t
+                r.t_ret_end = t + dur
+            self.ret_sched.observe(len(batch), dur)
+            cpu_busy += dur
+            ret_busy = True
+            heapq.heappush(ev, (t + dur, seq, "ret_done", batch))
+            seq += 1
+
+        def gen_step(t):
+            nonlocal seq, gen_running, gpu_busy
+            # admit arrivals into free slots (join at this step boundary)
+            joiners = []
+            while ctx_q and len(active) < cap["b"]:
+                r = ctx_q.pop(0)
+                r.t_gen_start = t
+                joiners.append(r)
+                active.append([r, s.out_len])
+            if not active:
+                gen_running = False
+                return
+            if cap["steps"] % s.policy_every == 0:
+                b = self.gen_sched.choose_batch(
+                    max(len(ctx_q) + len(active), 1))
+                cap["b"] = max(min(b, s.max_batch), 1)
+                cap["p"] = self._placement(cap["b"])
+                p = cap["p"]
+                trace.append({"t": t, "batch": len(active),
+                              "P": p.resident_partitions, "c_gpu": p.c_gpu,
+                              "w_gpu": p.w_gpu, "backlog": len(ctx_q),
+                              "nprobe": self._nprobe(p)
+                              or self.cost.num_partitions})
+            cap["steps"] += 1
+            p = cap["p"]
+            w_cpu = min(p.w_cpu, 1.0 - p.w_gpu)
+            dur = self.cost.decode_time_per_token(
+                len(active), s.in_len + s.out_len // 2, p.w_gpu, p.c_gpu,
+                s.depth_decode, w_cpu=w_cpu)
+            if joiners:     # the joining group's prefill rides this step
+                dur += self.cost.prefill_time(
+                    len(joiners), s.in_len, p.w_gpu, p.c_gpu,
+                    s.depth_prefill, w_cpu=w_cpu)
+            gpu_busy += dur
+            for slot in active:          # one token per live slot
+                slot[1] -= 1
+            for slot in [sl for sl in active if sl[1] <= 0]:
+                active.remove(slot)      # leave the step the row finishes
+                slot[0].t_gen_end = t + dur
+                done.append(slot[0])
+            gen_running = True
+            heapq.heappush(ev, (t + dur, seq, "gen_step", None))
+            seq += 1
+
+        while ev and len(done) < n:
+            now, _, kind, payload = heapq.heappop(ev)
+            if kind == "arrive":
+                ret_q.append(payload)
+            elif kind == "ret_done":
+                ctx_q.extend(payload)
+                ret_busy = False
+            elif kind == "gen_step":
+                gen_step(now)
+            start_ret(now)
+            if not gen_running:
+                gen_step(now)
         return SimResult(requests=done, policy_trace=trace,
                          gpu_busy=gpu_busy, cpu_busy=cpu_busy, horizon=now)
 

@@ -9,6 +9,23 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
+try:    # hypothesis is pinned in requirements.txt but optional locally
+    from hypothesis import HealthCheck, settings
+
+    # Bounded, deterministic profile so the property suites run in the CI
+    # fast tier on every push: no wall-clock deadline flakes on shared
+    # runners, capped example counts, shrink-stable.  Selected via
+    # HYPOTHESIS_PROFILE=ci (see .github/workflows/ci.yml).
+    settings.register_profile(
+        "ci", deadline=None, max_examples=60, derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow])
+    # only load profiles registered here — a foreign HYPOTHESIS_PROFILE
+    # value from the developer's shell must not abort collection
+    if os.environ.get("HYPOTHESIS_PROFILE") == "ci":
+        settings.load_profile("ci")
+except ImportError:
+    pass
+
 
 @pytest.fixture
 def rng():

@@ -134,6 +134,69 @@ def test_streamer_depth_respects_memory_budget(blob_store):
     loose.close()
 
 
+def test_streamer_budget_shrink_resizes_lookahead_mid_stream(blob_store):
+    """Regression: a placement change mid-sweep (set_budget) must shrink
+    the in-flight lookahead, not wait for the next sweep."""
+    store, _ = blob_store
+    from repro.core.prefetch import PrefetchPolicy
+    for pid in range(store.num_partitions):
+        store.spill(pid)
+    part = store.partition_bytes()
+    streamer = PartitionStreamer(store, PrefetchPolicy(max_depth=8),
+                                 free_bytes=float("inf"))
+    pids = list(range(store.num_partitions))
+    it = streamer.stream(pids)
+    pid, loaded = next(it)
+    assert streamer.last_depth == 8
+    streamer.set_budget(part * 1.5)          # placement demoted host memory
+    if loaded:
+        store.release(pid)
+    pid, loaded = next(it)
+    assert streamer.last_depth == 1          # resized within the same sweep
+    for pid, loaded in [(pid, loaded)] + list(it):
+        if loaded:
+            store.release(pid)
+    streamer.close()
+    assert store.resident_set() == []
+
+
+def test_streamer_tight_budget_sweep_evicts_and_matches_sync(blob_store):
+    """Eviction/lookahead under a tight memory budget: results identical
+    to the synchronous path and nothing stays resident afterwards."""
+    store, vecs = blob_store
+    from repro.core.prefetch import PrefetchPolicy
+    for pid in range(store.num_partitions):
+        store.spill(pid)
+    q = vecs[[5, 250, 990]]
+    s_sync, i_sync = store.search(q, 8, nprobe=3)
+    part = store.partition_bytes()
+    streamer = PartitionStreamer(store, PrefetchPolicy(max_depth=8),
+                                 free_bytes=part * 1.5)   # depth clamps to 1
+    stats = SearchStats()
+    s_async, i_async = store.search(q, 8, nprobe=3, streamer=streamer,
+                                    stats=stats)
+    streamer.close()
+    np.testing.assert_array_equal(i_sync, i_async)
+    np.testing.assert_allclose(s_sync, s_async)
+    assert streamer.last_depth == 1
+    assert stats.prefetched == stats.partitions_loaded > 0
+    assert store.resident_set() == []        # every loaded partition evicted
+
+
+def test_closed_streamer_degrades_to_sync(blob_store):
+    store, vecs = blob_store
+    for pid in range(store.num_partitions):
+        store.spill(pid)
+    q = vecs[[42]]
+    s_sync, i_sync = store.search(q, 6)
+    streamer = PartitionStreamer(store)
+    streamer.close()                          # pool gone before the sweep
+    s_deg, i_deg = store.search(q, 6, streamer=streamer)
+    np.testing.assert_array_equal(i_sync, i_deg)
+    np.testing.assert_allclose(s_sync, s_deg)
+    assert store.resident_set() == []
+
+
 # ---------------------------------------------------------------- merge path
 
 def test_masked_merge_matches_reference_all_impls():

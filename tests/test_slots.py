@@ -1,0 +1,119 @@
+"""Property tests for the continuous-batching slot table.
+
+Arbitrary interleavings of join (acquire) / step (advance) / leave
+(release) must never leak a slot, never let a stale lease touch a
+recycled slot's KV row, and must keep every request's position strictly
+monotone while it is live.  The table is pure bookkeeping (no JAX), so
+these run fast and exhaustively.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")   # pinned in requirements.txt; skip, never collection-error
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.generator import SlotRef, SlotTable, StaleSlotError
+
+CAPS = st.integers(min_value=1, max_value=5)
+OPS = st.lists(st.tuples(st.sampled_from(["join", "step", "leave"]),
+                         st.integers(min_value=0, max_value=9)),
+               max_size=80)
+
+
+def _invariants(table: SlotTable):
+    assert table.free_slots + table.active_slots == table.capacity
+    assert table.free_slots >= 0 and table.active_slots >= 0
+    live = table.active_refs()
+    assert len({r.index for r in live}) == len(live)   # one lease per slot
+
+
+@given(cap=CAPS, ops=OPS)
+@settings(max_examples=120)
+def test_interleavings_never_leak_or_double_lease(cap, ops):
+    table = SlotTable(cap)
+    nxt = 0
+    for op, pick in ops:
+        live = table.active_refs()
+        if op == "join":
+            ref = table.acquire(f"r{nxt}", pos=8, remaining=4)
+            if table.active_slots > len(live):
+                assert ref is not None
+            else:                         # table was full
+                assert ref is None and len(live) == cap
+            nxt += 1
+        elif op == "step" and live:
+            table.advance(live[pick % len(live)], token=pick)
+        elif op == "leave" and live:
+            table.release(live[pick % len(live)])
+        _invariants(table)
+
+
+@given(cap=CAPS, ops=OPS)
+@settings(max_examples=120)
+def test_positions_strictly_monotone_per_request(cap, ops):
+    table = SlotTable(cap)
+    nxt = 0
+    seen = {}                             # key -> last observed pos
+    for op, pick in ops:
+        live = table.active_refs()
+        if op == "join":
+            if table.acquire(f"r{nxt}", pos=8, remaining=100) is not None:
+                seen[f"r{nxt}"] = 8
+            nxt += 1
+        elif op == "step" and live:
+            ref = live[pick % len(live)]
+            stt = table.advance(ref, token=pick)
+            assert stt.pos == seen[stt.key] + 1   # strictly +1 per step
+            seen[stt.key] = stt.pos
+        elif op == "leave" and live:
+            table.release(live[pick % len(live)])
+        _invariants(table)
+
+
+@given(cap=CAPS, ops=OPS)
+@settings(max_examples=120)
+def test_stale_leases_never_touch_recycled_slots(cap, ops):
+    """A ref retained past release raises instead of serving a stale KV
+    row — even after the slot is re-leased to a different request."""
+    table = SlotTable(cap)
+    stale = []
+    nxt = 0
+    for op, pick in ops:
+        live = table.active_refs()
+        if op == "join":
+            table.acquire(f"r{nxt}", pos=0, remaining=9)
+            nxt += 1
+        elif op == "step" and live:
+            table.advance(live[pick % len(live)], token=pick)
+        elif op == "leave" and live:
+            ref = live[pick % len(live)]
+            table.release(ref)
+            stale.append(ref)
+        for ref in stale:
+            with pytest.raises(StaleSlotError):
+                table.advance(ref, token=0)
+            with pytest.raises(StaleSlotError):
+                table.release(ref)
+            with pytest.raises(StaleSlotError):
+                table.state(ref)
+        _invariants(table)
+
+
+def test_released_slot_is_immediately_reusable():
+    table = SlotTable(1)
+    a = table.acquire("a", pos=0, remaining=2)
+    assert a is not None and table.acquire("b", 0, 2) is None
+    table.release(a)
+    b = table.acquire("b", pos=0, remaining=2)
+    assert b is not None and b.index == a.index and b.epoch == a.epoch + 1
+
+
+def test_forged_epoch_rejected():
+    table = SlotTable(2)
+    a = table.acquire("a", pos=0, remaining=2)
+    with pytest.raises(StaleSlotError):
+        table.advance(SlotRef(a.index, a.epoch + 1), token=0)
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError):
+        SlotTable(0)
