@@ -1,11 +1,75 @@
 """Figure 8: latency distribution boxplots -> p50/p90/p99/max per system.
 
-Paper: RAGDoll cuts max latency ~50% vs vLLMRAG, ~80% vs AccRAG (70B)."""
+Paper: RAGDoll cuts max latency ~50% vs vLLMRAG, ~80% vs AccRAG (70B).
+
+``engine_rows`` additionally drives the *real* mini-engine (tiny model,
+real threads/JAX, not the simulator) through its continuous trace and
+reports dense vs paged KV-cache percentiles side by side — the
+ROADMAP item wiring the engine's continuous path into the percentile
+benchmarks."""
 from __future__ import annotations
+
+import tempfile
+import time
 
 from benchmarks.common import cost_model, optimizer_factory, timed, workload
 from repro.serving.baselines import run_suite
 from repro.serving.request import latency_table
+
+
+def engine_rows(n_requests: int = 10, num_slots: int = 3,
+                variants=("dense", "paged")):
+    """Continuous-trace percentiles from the real mini-engine.
+
+    Runs identical request streams through a dense-row and a paged
+    ``ContinuousGenerator`` behind the full ``RagdollEngine`` pipeline
+    and reports p50/p95/mean latency per variant.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.scheduler import BacklogScheduler
+    from repro.models.model import Model
+    from repro.retrieval import HashEmbedder, VectorStore
+    from repro.serving.engine import RagdollEngine
+    from repro.serving.generator import ContinuousGenerator, GeneratorConfig
+    from repro.serving.request import Request, percentile
+
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    params = Model(cfg, remat=False).init(jax.random.PRNGKey(0),
+                                          jnp.float32)
+    emb = HashEmbedder(dim=32)
+    texts = [f"doc {i} topic{i % 5}" for i in range(120)]
+    rows = []
+    with tempfile.TemporaryDirectory() as root:
+        store = VectorStore.build(texts, emb, num_partitions=4, root=root)
+        store.spill(3)
+        for variant in variants:
+            gen = ContinuousGenerator(
+                cfg, params, GeneratorConfig(ctx_len=32, max_new_tokens=4),
+                num_slots=num_slots, streamed=False,
+                paged=(variant == "paged"), page_size=8,
+                prefill_chunk=16 if variant == "paged" else None)
+            eng = RagdollEngine(store, emb, gen,
+                                BacklogScheduler(max_batch=8),
+                                BacklogScheduler(max_batch=num_slots),
+                                initial_partitions=3, policy_every=2)
+            eng.start()
+            for i in range(n_requests):
+                eng.submit(Request(rid=i, query=f"query {i}",
+                                   arrival=time.perf_counter()))
+            reqs = eng.drain(n_requests, timeout=180)
+            eng.stop()
+            assert len(reqs) == n_requests, (variant, len(reqs))
+            lat = [r.latency for r in reqs]
+            rows.append((
+                f"fig8/engine/{variant}",
+                1e6 * sum(lat) / len(lat),
+                f"p50={percentile(lat, 50):.3f} "
+                f"p95={percentile(lat, 95):.3f} "
+                f"mean={sum(lat) / len(lat):.3f} n={len(lat)}"))
+    return rows
 
 
 def run(full: bool = False):
@@ -27,4 +91,6 @@ def run(full: bool = False):
             f"fig8/{model}/max_reduction", 0.0,
             f"vs_vllm={1 - mx['ragdoll'] / mx['serial_vllm']:.0%} "
             f"vs_acc={1 - mx['ragdoll'] / mx['serial_acc']:.0%}"))
+    # real mini-engine continuous trace: dense vs paged side by side
+    rows.extend(engine_rows())
     return rows

@@ -100,6 +100,10 @@ class ModelProfile:
         # hidden states + attention workspace, bf16, x4 safety for fusion temps
         return 4 * batch * seq_len * self.d_model * 2
 
+    def kv_page_bytes(self, page_size: int) -> float:
+        """Bytes of one KV page across all layers (placement's paging unit)."""
+        return page_size * self.kv_bytes_per_token
+
     def flops_per_token(self) -> float:
         return 2 * self.n_active          # forward pass, per token
 

@@ -42,6 +42,14 @@ class StageQueue:
             if self._dq:
                 self._event.set()
 
+    def requeue(self, items) -> None:
+        """Return popped-but-unprocessed items to the FRONT, preserving
+        their original order (FIFO admission survives backpressure)."""
+        with self._lock:
+            self._dq.extendleft(reversed(list(items)))
+            if self._dq:
+                self._event.set()
+
     def pop_batch(self, n: int) -> List[Any]:
         with self._lock:
             out = []

@@ -54,13 +54,17 @@ class MemoryUse:
 
 class PlacementOptimizer:
     def __init__(self, cost: CostModel, avg_ctx_len: int = 512,
-                 avg_out_len: int = 128, min_nprobe_frac: float = 0.25):
+                 avg_out_len: int = 128, min_nprobe_frac: float = 0.25,
+                 kv_page_size: int = 16):
         self.cost = cost
         self.avg_ctx = avg_ctx_len
         self.avg_out = avg_out_len
         # recall floor: never probe fewer than this fraction of the
         # clusters (the fig11 sweep validates >=0.9 recall@k down here)
         self.min_nprobe_frac = min_nprobe_frac
+        # KV paging granularity: the unit the placement trades between
+        # accelerator KV pages and host partition cache
+        self.kv_page_size = kv_page_size
 
     def _nprobe_grid(self) -> List[int]:
         p_max = self.cost.num_partitions
@@ -80,6 +84,43 @@ class PlacementOptimizer:
 
     def feasible(self, p: Placement) -> bool:
         return self.memory_use(p).fits(self.cost.hw)
+
+    # ----------------------------------------------------- KV paging view
+    def kv_gpu_bytes(self, p: Placement) -> float:
+        """Attention-KV bytes this placement funds on the accelerator.
+
+        Deliberately excludes ``ssm_state_bytes``: SSM state is constant
+        per sequence and cannot live in token pages, so counting it here
+        would mint phantom pages for hybrid models (paging itself only
+        supports attention-family mixers).
+        """
+        return (p.c_gpu * p.gen_batch * (self.avg_ctx + self.avg_out)
+                * self.cost.mp.kv_bytes_per_token)
+
+    def kv_page_budget(self, p: Placement,
+                       page_size: Optional[int] = None) -> int:
+        """The placement's KV allocation expressed in whole pages — the
+        budget the engine hands to ``PagePool.resize`` at every policy
+        boundary (page-budget <-> placement coupling)."""
+        page_bytes = self.cost.mp.kv_page_bytes(page_size
+                                                or self.kv_page_size)
+        return int(self.kv_gpu_bytes(p) // max(page_bytes, 1.0))
+
+    def paged_batch_capacity(self, p: Placement,
+                             page_size: Optional[int] = None,
+                             req_len: Optional[int] = None) -> int:
+        """Concurrent requests the paged pool admits: each reserves only
+        ``ceil(actual_len / page)`` pages."""
+        ps = page_size or self.kv_page_size
+        need = -(-int(req_len or (self.avg_ctx + self.avg_out)) // ps)
+        return self.kv_page_budget(p, ps) // max(need, 1)
+
+    def dense_batch_capacity(self, p: Placement, worst_case_len: int) -> int:
+        """Concurrent requests under dense rows: every slot is provisioned
+        for the worst-case ``ctx_len + max_new_tokens`` row (same byte
+        pool as the paged view, so the comparison isolates paging)."""
+        row = worst_case_len * self.cost.mp.kv_bytes_per_token
+        return int(self.kv_gpu_bytes(p) // max(row, 1.0))
 
     # ----------------------------------------------------------- project
     def project(self, p: Placement) -> Placement:

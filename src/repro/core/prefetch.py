@@ -98,22 +98,25 @@ class StreamedExecutor:
             / max(self.n_layers, 1))
 
     # ------------------------------------------------------------ helpers
-    def _apply_fn(self, kind, mode):
-        key = (kind, mode)
+    def _apply_fn(self, kind, mode, kv_span=None):
+        key = (kind, mode, kv_span)
         if key not in self._apply_cache:
             cfg = self.cfg
+            layer_mode = "prefill" if mode == "chunk" else mode
 
-            def fn(lp, x, cache, pos):
+            def fn(lp, x, cache, pos, block_tab):
                 return transformer.apply_layer(
-                    lp, x, cfg, kind, mode=mode, cache=cache, pos=pos,
-                    ctx=None, moe_strategy="tp")
+                    lp, x, cfg, kind, mode=layer_mode, cache=cache, pos=pos,
+                    ctx=None, moe_strategy="tp", block_tab=block_tab,
+                    kv_span=kv_span)
 
             self._apply_cache[key] = jax.jit(fn)
         return self._apply_cache[key]
 
-    def _stream(self, x, caches, pos, mode: str):
+    def _stream(self, x, caches, pos, mode: str, block_tab=None,
+                kv_span=None):
         depth = self.policy.depth(
-            "prefill" if mode == "prefill" else "decode",
+            "prefill" if mode in ("prefill", "chunk") else "decode",
             self.free_bytes, self.layer_bytes)
         staged: Dict[int, Any] = {}
 
@@ -136,7 +139,8 @@ class StreamedExecutor:
             kind, _ = self.layers[i]
             lp = staged.pop(i)
             cache_i = caches[i] if caches is not None else None
-            x, nc, _ = self._apply_fn(kind, mode)(lp, x, cache_i, pos)
+            x, nc, _ = self._apply_fn(kind, mode, kv_span)(
+                lp, x, cache_i, pos, block_tab)
             new_caches.append(nc)
         return x, (new_caches if caches is not None else None)
 
@@ -150,25 +154,47 @@ class StreamedExecutor:
         logits = transformer.unembed(self.top, cfg, x, None)[:, 0]
         return logits, new_caches
 
-    def decode(self, inputs, caches: List[dict], pos, slot_mask=None):
+    def decode(self, inputs, caches: List[dict], pos, slot_mask=None,
+               block_tab=None, kv_span=None):
         """One decode step; ``slot_mask`` (B,) marks live slot rows.
 
         A step where *no* slot is live short-circuits before ``_stream``:
         the offloaded layers are not re-streamed host->device just to
         decode garbage for a drained slot table.  Dead rows in a mixed
-        step still ride the batched compute — their cache writes are
-        row-independent garbage that the next join's full-row scatter
-        overwrites, so masking them per leaf would be pure overhead on
-        the hot decode path.
+        step still ride the batched compute — on the dense layout their
+        cache writes are row-independent garbage that the next join's
+        full-row scatter overwrites; on the paged layout
+        (``block_tab``/``kv_span`` given) their block tables point at
+        the trash page, so the writes can never land in a page reused
+        by another slot.
         """
         cfg = self.cfg
         if slot_mask is not None \
                 and not np.asarray(slot_mask).astype(bool).any():
             return jnp.zeros((inputs.shape[0], cfg.vocab_size)), caches
         x = transformer._embed_inputs(self.top, cfg, inputs)
-        x, new_caches = self._stream(x, caches, pos, "decode")
+        x, new_caches = self._stream(x, caches, pos, "decode",
+                                     block_tab=block_tab, kv_span=kv_span)
         from repro.models import layers as L
         x = L.rms_norm(x, self.top["final_norm"], cfg.norm_eps)
+        logits = transformer.unembed(self.top, cfg, x, None)[:, 0]
+        return logits, new_caches
+
+    def prefill_chunk(self, inputs, caches: List[dict], offset,
+                      block_tab=None, kv_span=None):
+        """Prefill one prompt chunk at per-sequence start ``offset`` (B,).
+
+        Streams the offloaded layers once per chunk (prefill-depth
+        queue); the chunk's KV lands at ``[offset, offset + C)`` and its
+        attention spans the cache written by earlier chunks.  Returns
+        the chunk's last-position logits and the updated caches.
+        """
+        cfg = self.cfg
+        x = transformer._embed_inputs(self.top, cfg, inputs)
+        x, new_caches = self._stream(x, caches, offset, "chunk",
+                                     block_tab=block_tab, kv_span=kv_span)
+        from repro.models import layers as L
+        x = L.rms_norm(x[:, -1:], self.top["final_norm"], cfg.norm_eps)
         logits = transformer.unembed(self.top, cfg, x, None)[:, 0]
         return logits, new_caches
 
@@ -183,3 +209,7 @@ class StreamedExecutor:
             out.append(jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                     spec))
         return out
+
+    def layer_kinds(self) -> List[Any]:
+        """Mixer kinds per streamed layer (for paged cache construction)."""
+        return [k for k, _ in self.layers]

@@ -53,12 +53,15 @@ def flash_attention(
     block_kv: int = 256,
 ) -> jnp.ndarray:
     if impl is None:
-        if _on_tpu():
+        if _on_tpu() and isinstance(q_offset, int):
             impl = "pallas"
         elif (q.shape[1] % 256 == 0 and k.shape[1] % 256 == 0
               and isinstance(q_offset, int)):
             impl = "flash_vjp"       # memory-efficient fwd AND bwd
         else:
+            # per-row q_offset arrays (chunked prefill) route here: the
+            # scan path masks per batch row, which the TPU kernel and
+            # flash_vjp do not support
             impl = "kv_scan"
     if impl == "naive":
         return ref.attention_reference(
@@ -129,7 +132,12 @@ def _attention_kv_scan(q, k, v, *, causal, window, softcap, kv_len,
     v_b = v_.reshape(b, kvh, nblk, block_kv, dv).transpose(2, 0, 1, 3, 4)
 
     q32 = q_.astype(jnp.float32) * scale
-    q_pos = jnp.arange(sq) + q_offset                       # (Sq,)
+    # scalar q_offset: shared (Sq,) positions; per-row array: (B, Sq)
+    per_row = jnp.ndim(q_offset) > 0
+    if per_row:
+        q_pos = q_offset[:, None] + jnp.arange(sq)          # (B, Sq)
+    else:
+        q_pos = jnp.arange(sq) + q_offset                   # (Sq,)
     valid_len = kv_len if kv_len is not None else jnp.full((b,), sk)
 
     def body(carry, xs):
@@ -142,10 +150,17 @@ def _attention_kv_scan(q, k, v, *, causal, window, softcap, kv_len,
         k_pos = start + jnp.arange(block_kv)                # (bk,)
         mask = k_pos[None, :] < valid_len[:, None]          # (B, bk)
         mask = mask[:, None, None, None, :]                 # (B,1,1,1,bk)
+
+        def qk_mask(cmp):                                   # -> (B,1,1,Sq,bk)
+            if per_row:
+                return cmp(k_pos[None, None, :],
+                           q_pos[:, :, None])[:, None, None]
+            return cmp(k_pos[None, :], q_pos[:, None])[None, None, None]
+
         if causal:
-            mask = mask & (k_pos[None, :] <= q_pos[:, None])[None, None, None]
+            mask = mask & qk_mask(lambda k_, q_: k_ <= q_)
         if window is not None:
-            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)[None, None, None]
+            mask = mask & qk_mask(lambda k_, q_: k_ > q_ - window)
         s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         corr = jnp.exp(m - m_new)
@@ -295,6 +310,50 @@ def _decode_einsum(q, k_cache, v_cache, kv_len, *, window, softcap, scale):
     out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, h, dv).astype(q.dtype)
+
+
+# ===========================================================================
+# Paged decode attention (block-table gather over pooled KV pages)
+# ===========================================================================
+
+def paged_decode_attention(
+    q: jnp.ndarray,          # (B, H, D)
+    k_pool: jnp.ndarray,     # (P, page, KV, D) pooled cache pages
+    v_pool: jnp.ndarray,     # (P, page, KV, D)
+    block_tab: jnp.ndarray,  # (B, nmax) int32 page ids per slot block
+    kv_len: jnp.ndarray,     # (B,)
+    *,
+    kv_span: Optional[int] = None,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    """Decode attention over a paged KV cache.
+
+    ``gather`` (the CPU default) materializes the dense per-slot view via
+    the block table, statically truncated to ``kv_span`` (the dense cache
+    length), and runs the *exact* dense einsum path — so paged decode is
+    bit-identical to the dense cache layout.  ``pallas`` streams pages
+    inside the kernel via scalar-prefetch block tables (no dense copy).
+    """
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "gather"
+    if impl == "naive":
+        return ref.paged_decode_attention_reference(
+            q, k_pool, v_pool, block_tab, kv_len, kv_span=kv_span,
+            window=window, softcap=softcap, scale=scale)
+    if impl == "pallas":
+        from repro.kernels import paged_attention as pa
+        return pa.paged_decode_attention_pallas(
+            q, k_pool, v_pool, block_tab, kv_len, window=window,
+            softcap=softcap, scale=scale, interpret=not _on_tpu())
+    if impl == "gather":
+        k_dense = ref.gather_paged_kv(k_pool, block_tab, kv_span)
+        v_dense = ref.gather_paged_kv(v_pool, block_tab, kv_span)
+        return _decode_einsum(q, k_dense, v_dense, kv_len,
+                              window=window, softcap=softcap, scale=scale)
+    raise ValueError(f"unknown paged decode impl {impl!r}")
 
 
 # ===========================================================================

@@ -1,0 +1,133 @@
+"""Paged decode attention Pallas TPU kernel (vLLM-style block tables).
+
+One new token per sequence attends over a KV cache stored as pooled
+fixed-size *pages*: layer KV lives in ``(P, page, KV, D)`` arrays and a
+``(B, nmax)`` block table maps each slot's logical block ``i`` to the
+page holding positions ``[i*page, (i+1)*page)``.  The kernel gathers by
+block table *inside* the grid via scalar prefetch: the table is a
+scalar-prefetch operand, so each KV BlockSpec's ``index_map`` picks the
+physical page for grid step ``(b, kh, ik)`` and the DMA engine streams
+exactly the pages a sequence owns — no host-side gather, no dense copy.
+
+Grid: (batch, kv_head, blocks); blocks innermost ("arbitrary") with VMEM
+scratch carrying the online softmax, mirroring ``decode_attention.py``.
+Blocks past ``kv_len`` (including trash-page entries of short block
+tables) are skipped by ``pl.when``, so unallocated blocks cost nothing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tab_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *,
+            scale: float, window: Optional[int], softcap: Optional[float],
+            page: int, nk: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = kvlen_ref[b]
+    k_start = ik * page
+    needed = k_start < kv_len
+    if window is not None:
+        needed = jnp.logical_and(needed, k_start + page > kv_len - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (page, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < kv_len
+        if window is not None:
+            mask &= k_pos >= kv_len - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q: jnp.ndarray,          # (B, H, D)
+    k_pool: jnp.ndarray,     # (P, page, KV, D)
+    v_pool: jnp.ndarray,     # (P, page, KV, D)
+    block_tab: jnp.ndarray,  # (B, nmax) int32 page ids
+    kv_len: jnp.ndarray,     # (B,)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    p_pages, page, kvh, _ = k_pool.shape
+    nmax = block_tab.shape[1]
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+
+    qg = q.reshape(b, kvh, g, d)                 # (B, KV, G, D)
+    kt = k_pool.transpose(0, 2, 1, 3)            # (P, KV, page, D)
+    vt = v_pool.transpose(0, 2, 1, 3)
+    block_tab = block_tab.astype(jnp.int32)
+    kv_len = kv_len.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, softcap=softcap,
+        page=page, nk=nmax)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                    # block_tab, kv_len
+        grid=(b, kvh, nmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b, kh, ik, tab, kl: (b, kh, 0, 0)),
+            pl.BlockSpec((1, 1, page, d),
+                         lambda b, kh, ik, tab, kl: (tab[b, ik], kh, 0, 0)),
+            pl.BlockSpec((1, 1, page, d),
+                         lambda b, kh, ik, tab, kl: (tab[b, ik], kh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b, kh, ik, tab, kl: (b, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tab, kv_len, qg, kt, vt)
+    return out.reshape(b, h, d)

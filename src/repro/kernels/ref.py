@@ -51,14 +51,24 @@ def attention_reference(
                         k.astype(jnp.float32)) * scale
     scores = _softcap(scores, softcap)
 
-    q_pos = jnp.arange(sq)[:, None] + q_offset          # (Sq, 1)
-    k_pos = jnp.arange(sk)[None, :]                     # (1, Sk)
-    mask = jnp.ones((sq, sk), dtype=bool)
-    if causal:
-        mask &= k_pos <= q_pos
-    if window is not None:
-        mask &= k_pos > q_pos - window
-    mask = jnp.broadcast_to(mask[None, None], (b, 1, sq, sk))
+    if jnp.ndim(q_offset) == 0:
+        q_pos = jnp.arange(sq)[:, None] + q_offset      # (Sq, 1)
+        k_pos = jnp.arange(sk)[None, :]                 # (1, Sk)
+        mask = jnp.ones((sq, sk), dtype=bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        mask = jnp.broadcast_to(mask[None, None], (b, 1, sq, sk))
+    else:                                               # per-row offsets (B,)
+        q_pos = q_offset[:, None] + jnp.arange(sq)      # (B, Sq)
+        k_pos = jnp.arange(sk)[None, :]
+        mask = jnp.ones((b, sq, sk), dtype=bool)
+        if causal:
+            mask &= k_pos[:, None] <= q_pos[:, :, None]
+        if window is not None:
+            mask &= k_pos[:, None] > q_pos[:, :, None] - window
+        mask = mask[:, None]                            # (B, 1, Sq, Sk)
     if kv_len is not None:
         mask &= (k_pos < kv_len[:, None, None, None])
     scores = jnp.where(mask, scores, NEG_INF)
@@ -97,6 +107,42 @@ def decode_attention_reference(
                          repeat_kv(v_cache, h).astype(jnp.float32))
         return out.astype(q.dtype)
     return out[:, 0]
+
+
+def gather_paged_kv(pool: jnp.ndarray, block_tab: jnp.ndarray,
+                    kv_span: Optional[int] = None) -> jnp.ndarray:
+    """(P, page, ...) pool + (B, nmax) block table -> dense (B, S, ...).
+
+    ``kv_span`` statically truncates the gathered view to the dense
+    cache length so downstream attention sees exactly the dense shape
+    (token-identity with the unpaged path depends on this).
+    """
+    b, nmax = block_tab.shape
+    gathered = pool[block_tab]                    # (B, nmax, page, ...)
+    dense = gathered.reshape((b, nmax * pool.shape[1]) + pool.shape[2:])
+    if kv_span is not None:
+        dense = dense[:, :kv_span]
+    return dense
+
+
+def paged_decode_attention_reference(
+    q: jnp.ndarray,          # (B, H, D) — single new token per sequence
+    k_pool: jnp.ndarray,     # (P, page, KV, D) pooled cache pages
+    v_pool: jnp.ndarray,     # (P, page, KV, D)
+    block_tab: jnp.ndarray,  # (B, nmax) page ids per slot block
+    kv_len: jnp.ndarray,     # (B,) valid cache entries (incl. current)
+    *,
+    kv_span: Optional[int] = None,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Oracle: gather pages to the dense layout, run dense decode attention."""
+    k_dense = gather_paged_kv(k_pool, block_tab, kv_span)
+    v_dense = gather_paged_kv(v_pool, block_tab, kv_span)
+    return decode_attention_reference(q, k_dense, v_dense, kv_len,
+                                      window=window, softcap=softcap,
+                                      scale=scale)
 
 
 def topk_reference(

@@ -85,10 +85,15 @@ def attention_forward(
     mixer: str,                      # "attn" | "local"
     mode: str,                       # "train" | "prefill" | "decode"
     cache: Optional[dict] = None,    # {"k","v"} (B, S_cache, KV, hd)
-    pos: Optional[jnp.ndarray] = None,   # (B,) current position (decode)
+                                     #   or pooled (P, page, KV, hd) when
+                                     #   block_tab is given (paged path)
+    pos: Optional[jnp.ndarray] = None,   # (B,) current position (decode),
+                                         # or chunk offsets (chunked prefill)
     use_rope: bool = True,
     causal: bool = True,
     ctx=None,
+    block_tab: Optional[jnp.ndarray] = None,  # (B, nmax) page ids (paged)
+    kv_span: Optional[int] = None,   # static dense length of the KV view
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     b, s, d_model = x.shape
     h, kvh = cfg.num_heads, cfg.num_kv_heads
@@ -97,6 +102,33 @@ def attention_forward(
     rot = int(hd * cfg.rope_fraction)
 
     q, k, v = _project_qkv(p, x, cfg)
+
+    if mode == "prefill" and pos is not None:
+        # ---- chunked prefill: positions [pos, pos+s) attend over the
+        # cache written so far (earlier chunks included).  The KV view
+        # is statically truncated to ``kv_span`` (the full-prefill
+        # width), so per-row compute is identical to one-shot prefill.
+        positions = pos[:, None] + jnp.arange(s)             # (B, S)
+        if use_rope:
+            cos, sin = layers.rope_cos_sin(positions, rot, cfg.rope_theta)
+            cos, sin = cos[:, :, None], sin[:, :, None]
+            q = layers.apply_rope(q, cos, sin, rot)
+            k = layers.apply_rope(k, cos, sin, rot)
+        if block_tab is None:
+            kc = _row_update(cache["k"], k.astype(cache["k"].dtype), pos)
+            vc = _row_update(cache["v"], v.astype(cache["v"].dtype), pos)
+            kd = kc if kv_span is None else kc[:, :kv_span]
+            vd = vc if kv_span is None else vc[:, :kv_span]
+        else:
+            kc = _paged_scatter(cache["k"], k, block_tab, positions)
+            vc = _paged_scatter(cache["v"], v, block_tab, positions)
+            kd = ref.gather_paged_kv(kc, block_tab, kv_span)
+            vd = ref.gather_paged_kv(vc, block_tab, kv_span)
+        out = ops.flash_attention(
+            q, kd, vd, causal=causal, window=window,
+            softcap=cfg.attn_logit_softcap, kv_len=pos + s, q_offset=pos)
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        return out, {"k": kc, "v": vc}
 
     if mode in ("train", "prefill"):
         positions = jnp.arange(s)
@@ -137,13 +169,23 @@ def attention_forward(
         cos, sin = cos[:, None, None], sin[:, None, None]
         q = layers.apply_rope(q, cos, sin, rot)
         k = layers.apply_rope(k, cos, sin, rot)
-    # scatter new k/v at per-row positions
-    kc = _row_update(cache["k"], k.astype(cache["k"].dtype), pos)
-    vc = _row_update(cache["v"], v.astype(cache["v"].dtype), pos)
     kv_len = pos + 1
-    out = ops.decode_attention(
-        q[:, 0], kc, vc, kv_len, window=window,
-        softcap=cfg.attn_logit_softcap)
+    if block_tab is not None:
+        # paged: scatter the new token into its slot's page, attend
+        # through the block table (gather backend is bit-identical to
+        # the dense layout; Pallas backend streams pages on TPU)
+        kc = _paged_scatter(cache["k"], k, block_tab, pos[:, None])
+        vc = _paged_scatter(cache["v"], v, block_tab, pos[:, None])
+        out = ops.paged_decode_attention(
+            q[:, 0], kc, vc, block_tab, kv_len, kv_span=kv_span,
+            window=window, softcap=cfg.attn_logit_softcap)
+    else:
+        # scatter new k/v at per-row positions
+        kc = _row_update(cache["k"], k.astype(cache["k"].dtype), pos)
+        vc = _row_update(cache["v"], v.astype(cache["v"].dtype), pos)
+        out = ops.decode_attention(
+            q[:, 0], kc, vc, kv_len, window=window,
+            softcap=cfg.attn_logit_softcap)
     out = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
     return out, {"k": kc, "v": vc}
 
@@ -154,6 +196,21 @@ def _row_update(cache: jnp.ndarray, new: jnp.ndarray,
     def upd(c, n, p):
         return jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
     return jax.vmap(upd)(cache, new, pos)
+
+
+def _paged_scatter(pool: jnp.ndarray, new: jnp.ndarray,
+                   block_tab: jnp.ndarray,
+                   positions: jnp.ndarray) -> jnp.ndarray:
+    """pool (P, page, ...), new (B, S, ...), positions (B, S) -> pool'.
+
+    Writes each token's KV at ``(block_tab[b, p // page], p % page)``.
+    Freed slots' tables point every block at the trash page (id 0), so
+    parked writes from dead or still-prefilling rows can never touch a
+    page owned by a live sequence.
+    """
+    page = pool.shape[1]
+    pages = jnp.take_along_axis(block_tab, positions // page, axis=1)
+    return pool.at[pages, positions % page].set(new.astype(pool.dtype))
 
 
 # ---------------------------------------------------------------------------

@@ -155,10 +155,19 @@ class Model:
             params, self.cfg, inputs, cache, ctx=self.ctx,
             moe_strategy=self.moe_strategy, enc_embeds=enc_embeds)
 
-    def decode(self, params, inputs, cache, pos):
+    def decode(self, params, inputs, cache, pos, block_tab=None,
+               kv_span=None):
         return transformer.decode_step(
             params, self.cfg, inputs, cache, pos, ctx=self.ctx,
-            moe_strategy=self.moe_strategy)
+            moe_strategy=self.moe_strategy, block_tab=block_tab,
+            kv_span=kv_span)
+
+    def chunk_prefill(self, params, inputs, cache, offset, block_tab=None,
+                      kv_span=None):
+        return transformer.chunk_prefill_step(
+            params, self.cfg, inputs, cache, offset, ctx=self.ctx,
+            moe_strategy=self.moe_strategy, block_tab=block_tab,
+            kv_span=kv_span)
 
 
 def build_model(cfg: ModelConfig, ctx: Optional[MeshContext] = None,

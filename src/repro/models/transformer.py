@@ -126,17 +126,26 @@ def apply_layer(
     mode: str, cache: Optional[dict], pos, ctx: Optional[MeshContext],
     moe_strategy: str, causal: bool = True,
     enc_out: Optional[jnp.ndarray] = None,
+    block_tab: Optional[jnp.ndarray] = None,
+    kv_span: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
     mixer, ffn = kind
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict = dict(cache) if cache is not None else None
+
+    if mixer not in ("attn", "local") and (
+            block_tab is not None
+            or (mode == "prefill" and pos is not None)):
+        raise NotImplementedError(
+            f"paged KV / chunked prefill support attn-family mixers only "
+            f"(got {mixer!r})")
 
     h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
     if mixer in ("attn", "local"):
         sub = {k: cache[k] for k in ("k", "v")} if cache is not None else None
         out, nc = attention.attention_forward(
             p["attn"], h, cfg, mixer=mixer, mode=mode, cache=sub, pos=pos,
-            causal=causal, ctx=ctx)
+            causal=causal, ctx=ctx, block_tab=block_tab, kv_span=kv_span)
         if nc is not None:
             new_cache.update(nc)
     elif mixer == "mla":
@@ -196,6 +205,8 @@ def _run_stack(
     mode: str, caches: Optional[List[dict]], pos,
     ctx: Optional[MeshContext], moe_strategy: str, causal: bool,
     enc_out: Optional[jnp.ndarray], remat: bool = False,
+    block_tab: Optional[jnp.ndarray] = None,
+    kv_span: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, Optional[List[dict]], jnp.ndarray]:
     pattern = cfg.layer_pattern
     with_cache = caches is not None
@@ -209,7 +220,8 @@ def _run_stack(
             xc, nc, a = apply_layer(
                 params_list[j], xc, cfg, kind, mode=mode,
                 cache=cache_list[j], pos=pos, ctx=ctx,
-                moe_strategy=moe_strategy, causal=causal, enc_out=enc_out)
+                moe_strategy=moe_strategy, causal=causal, enc_out=enc_out,
+                block_tab=block_tab, kv_span=kv_span)
             new_caches.append(nc if nc is not None else {})
             auxc = auxc + a
         ys = tuple(new_caches) if with_cache else None
@@ -326,10 +338,15 @@ def decode_step(
     p: Params, cfg: ModelConfig, inputs: jnp.ndarray, cache: dict,
     pos: jnp.ndarray, *,
     ctx: Optional[MeshContext] = None, moe_strategy: str = "tp",
+    block_tab: Optional[jnp.ndarray] = None,
+    kv_span: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, dict]:
     """One decode step at per-sequence positions ``pos`` (B,).
 
     ``inputs``: (B, 1) token ids or (B, 1, D) stub embeddings.
+    When ``block_tab`` (B, nmax) is given, ``cache`` holds pooled
+    (P, page, ...) KV pages and writes/reads go through the block table
+    (``kv_span`` = static dense view length).
     Returns (logits (B, V), new cache).
     """
     x = _embed_inputs(p, cfg, inputs)
@@ -341,13 +358,55 @@ def decode_step(
         for i, lp in enumerate(p["prefix"]):
             x, nc, _ = apply_layer(lp, x, cfg, (kinds[i][0], "dense"),
                                    mode="decode", cache=cache["prefix"][i],
-                                   pos=pos, ctx=ctx, moe_strategy=moe_strategy)
+                                   pos=pos, ctx=ctx, moe_strategy=moe_strategy,
+                                   block_tab=block_tab, kv_span=kv_span)
             new_prefix.append(nc)
         new_cache["prefix"] = new_prefix
     x, blocks_cache, _ = _run_stack(
         p["blocks"], cfg, x, mode="decode", caches=cache["blocks"], pos=pos,
-        ctx=ctx, moe_strategy=moe_strategy, causal=True, enc_out=None)
+        ctx=ctx, moe_strategy=moe_strategy, causal=True, enc_out=None,
+        block_tab=block_tab, kv_span=kv_span)
     new_cache["blocks"] = blocks_cache
     x = layers.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = unembed(p, cfg, x, ctx)[:, 0]
+    return logits, new_cache
+
+
+def chunk_prefill_step(
+    p: Params, cfg: ModelConfig, inputs: jnp.ndarray, cache: dict,
+    offset: jnp.ndarray, *,
+    ctx: Optional[MeshContext] = None, moe_strategy: str = "tp",
+    block_tab: Optional[jnp.ndarray] = None,
+    kv_span: Optional[int] = None,
+) -> Tuple[jnp.ndarray, dict]:
+    """Prefill one prompt chunk at per-sequence start ``offset`` (B,).
+
+    ``inputs`` (B, C) is one chunk of the prompt; its KV is written at
+    positions ``[offset, offset + C)`` and attention runs against the
+    cache filled by earlier chunks, truncated to the static ``kv_span``
+    so per-row compute matches one-shot prefill exactly.  Returns the
+    chunk's last-position logits (only meaningful on the final chunk)
+    and the updated cache.
+    """
+    x = _embed_inputs(p, cfg, inputs)
+    x = constrain(x, ctx, "batch", None, None)
+    new_cache: dict = {}
+    if cfg.first_k_dense:
+        new_prefix = []
+        kinds = cfg.layer_kinds()
+        for i, lp in enumerate(p["prefix"]):
+            x, nc, _ = apply_layer(lp, x, cfg, (kinds[i][0], "dense"),
+                                   mode="prefill", cache=cache["prefix"][i],
+                                   pos=offset, ctx=ctx,
+                                   moe_strategy=moe_strategy,
+                                   block_tab=block_tab, kv_span=kv_span)
+            new_prefix.append(nc)
+        new_cache["prefix"] = new_prefix
+    x, blocks_cache, _ = _run_stack(
+        p["blocks"], cfg, x, mode="prefill", caches=cache["blocks"],
+        pos=offset, ctx=ctx, moe_strategy=moe_strategy, causal=True,
+        enc_out=None, block_tab=block_tab, kv_span=kv_span)
+    new_cache["blocks"] = blocks_cache
+    x = layers.rms_norm(x[:, -1:], p["final_norm"], cfg.norm_eps)
     logits = unembed(p, cfg, x, ctx)[:, 0]
     return logits, new_cache

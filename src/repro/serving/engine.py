@@ -50,6 +50,8 @@ class PolicyEvent:
     c_gpu: float
     w_gpu: float
     nprobe: Optional[int] = None
+    gen_slots: Optional[int] = None    # live slot-table capacity
+    kv_pages: Optional[int] = None     # paged pool budget (paged only)
 
 
 class RagdollEngine:
@@ -86,7 +88,8 @@ class RagdollEngine:
                                 on_batch_boundary=self._ret_boundary)
             gw = StepPumpWorker(
                 "generation", cq, dq,
-                capacity_fn=lambda: self.generator.free_slots,
+                # paged generators also gate admission on free KV pages
+                capacity_fn=lambda: self.generator.admit_capacity,
                 admit_fn=self._admit_requests, step_fn=self._generate_step,
                 on_policy_boundary=self._gen_boundary,
                 policy_every=policy_every)
@@ -131,11 +134,19 @@ class RagdollEngine:
 
     # --------------------------------------- continuous generation stage
     def _admit_requests(self, reqs: List[Request]) -> None:
-        """Prefill arrivals into free KV slots (join at any decode step)."""
+        """Prefill arrivals into free KV slots (join at any decode step).
+
+        ``admit_capacity`` guarantees these joins succeed on the single
+        pump thread; should a ``None`` join ever appear (future async
+        capacity changes), the request returns to the FRONT of the
+        context queue so admission stays FIFO under backpressure.
+        """
         t = time.perf_counter()
-        for r in reqs:
+        for i, r in enumerate(reqs):
             ref = self.generator.join(r, r.prompt, r.max_new_tokens)
-            assert ref is not None, "admitted past slot capacity"
+            if ref is None:
+                self.pipeline.context_queue.requeue(reqs[i:])
+                return
             r.t_gen_start = t
 
     def _generate_step(self) -> Optional[List[Request]]:
@@ -179,6 +190,19 @@ class RagdollEngine:
         placement = self.opt.solve(b)
         self.pcache.set_target(placement.resident_partitions)
         self.nprobe = placement.nprobe
+        if self.continuous:
+            # dynamic capacity: grow/shrink the slot table with the live
+            # placement's gen_batch; paged generators also retarget their
+            # KV page budget from the placement's accelerator KV share
+            # (retarget clamps it to the block-table-addressable range)
+            pages = None
+            if getattr(self.generator, "paged", False):
+                pages = self.opt.kv_page_budget(
+                    placement, self.generator.page_size)
+            applied = self.generator.retarget(num_slots=b,
+                                              page_budget=pages)
+        else:
+            applied = {}
         # couple the partition streamer's lookahead to the host memory the
         # live placement leaves free (ROADMAP: streamer depth feedback)
         hw = self.opt.cost.hw
@@ -189,7 +213,9 @@ class RagdollEngine:
             t=time.perf_counter(), gen_batch=b,
             resident_partitions=placement.resident_partitions,
             c_gpu=placement.c_gpu, w_gpu=placement.w_gpu,
-            nprobe=placement.nprobe))
+            nprobe=placement.nprobe,
+            gen_slots=applied.get("slots"),
+            kv_pages=applied.get("pages")))
 
     # ------------------------------------------------------------- public
     def start(self) -> None:

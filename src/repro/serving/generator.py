@@ -43,6 +43,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.prefetch import PrefetchPolicy, StreamedExecutor
 from repro.models.model import Model, init_cache
+from repro.serving import kvpool
+from repro.serving.kvpool import PagedKVCache
 
 
 class HashTokenizer:
@@ -232,38 +234,112 @@ class SlotTable:
         self._free.append(ref.index)
         return st
 
+    # -------------------------------------------------------------- resize
+    def resize(self, target: int) -> int:
+        """Retarget capacity; returns the actual new capacity.
+
+        Growth appends fresh free slots; shrink drops only *free* slots
+        from the top, so the result is clamped to one past the highest
+        active lease (capacity never dips below live work).  Dropped
+        slots keep their epoch counters, so a SlotRef retained across a
+        shrink/grow cycle still raises :class:`StaleSlotError` instead
+        of validating against a fresh lease of the re-grown slot.
+        """
+        target = max(int(target), 1)
+        if target > self.capacity:
+            grown = list(range(self.capacity, target))
+            if target > len(self._epochs):      # epochs survive shrink
+                self._epochs.extend([0] * (target - len(self._epochs)))
+            self._free = sorted(self._free + grown, reverse=True)
+            self.capacity = target
+            return self.capacity
+        floor = max(target, max(self._active, default=-1) + 1)
+        self._free = sorted((i for i in self._free if i < floor),
+                            reverse=True)
+        self.capacity = floor
+        return self.capacity
+
 
 # ---------------------------------------------------------------------------
 # continuous (iteration-level) generator
 # ---------------------------------------------------------------------------
 
+@dataclass
+class _ChunkJob:
+    """A join whose prompt is still being prefilled chunk by chunk."""
+    ref: SlotRef
+    toks: np.ndarray          # (ctx_len,) full padded prompt
+    offset: int = 0           # next unwritten position
+
+
 class ContinuousGenerator(_GeneratorBase):
     """Decode-step batching: requests join/leave a persistent slot table.
 
-    The KV caches are allocated once for ``num_slots`` rows; ``join``
-    prefills a request at batch=1 and scatters the resulting cache row
-    into a free slot, ``step`` advances every live slot one greedy token,
-    and ``harvest`` drains rows that emitted EOS or exhausted their
-    budget.  Dead slots keep riding the batched decode (their rows are
-    row-independent garbage, fully overwritten on the next join); on the
-    streamed path the slot-validity mask is forwarded so an all-dead step
-    never re-streams offloaded layers.
+    Two KV layouts share the discipline:
+
+    * **dense** (default): caches are allocated once for ``num_slots``
+      rows of worst-case ``ctx_len + max_new_tokens``; ``join`` prefills
+      at batch=1 and scatters the cache row into a free slot.  Dead
+      slots keep riding the batched decode (their rows are
+      row-independent garbage, fully overwritten on the next join).
+    * **paged** (``paged=True``): KV lives in a shared
+      :class:`~repro.serving.kvpool.PagedKVCache` pool; ``join``
+      reserves only ``ceil((ctx + budget) / page_size)`` pages, so the
+      same KV byte budget admits more concurrent requests than dense
+      worst-case rows.  ``join`` returns ``None`` on page exhaustion as
+      well as slot exhaustion (join backpressure).  Freed slots' block
+      tables are reset to the trash page, so a recycled slot can never
+      read or clobber pages reissued to another request.  With
+      ``prefill_chunk=N`` a joiner's prompt is prefilled ``N`` tokens
+      per ``step`` interleaved with live decode (chunked prefill), so
+      long contexts no longer stall the batch.
+
+    Both layouts are token-identical to the whole-batch ``Generator``
+    (see ``tests/test_continuous.py`` / ``tests/test_paged.py``).
     """
 
     def __init__(self, cfg: ModelConfig, params, gen_cfg: GeneratorConfig,
                  num_slots: int = 4, streamed: bool = False,
-                 policy: Optional[PrefetchPolicy] = None):
+                 policy: Optional[PrefetchPolicy] = None,
+                 paged: bool = False, page_size: int = 8,
+                 page_budget: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         super().__init__(cfg, params, gen_cfg, streamed=streamed,
                          policy=policy)
         self.num_slots = num_slots
         self.table = SlotTable(num_slots)
         total = gen_cfg.ctx_len + gen_cfg.max_new_tokens
         self._total = total
-        if streamed:
-            self.caches = self.exec.init_caches(num_slots, total,
-                                                gen_cfg.dtype)
+        self.paged = paged
+        self.page_size = page_size
+        if prefill_chunk is not None and not paged:
+            raise ValueError("prefill_chunk requires paged=True")
+        self.prefill_chunk = prefill_chunk
+        self._prefilling: Dict[int, _ChunkJob] = {}
+        if paged:
+            self.kv: Optional[PagedKVCache] = PagedKVCache(
+                cfg, num_slots, total, page_size, num_pages=page_budget,
+                dtype=gen_cfg.dtype)
+            if streamed:
+                self.caches = self.kv.init_layered(self.exec.layer_kinds())
+            else:
+                self.cache = self.kv.init_stacked()
+                span, ctx_span = total, gen_cfg.ctx_len
+                self._decode_paged = jax.jit(
+                    lambda p, x, c, pos, bt: self.model.decode(
+                        p, x, c, pos, block_tab=bt, kv_span=span),
+                    donate_argnums=(2,))
+                self._chunk_paged = jax.jit(
+                    lambda p, x, c, off, bt: self.model.chunk_prefill(
+                        p, x, c, off, block_tab=bt, kv_span=ctx_span),
+                    donate_argnums=(2,))
         else:
-            self.cache = init_cache(cfg, num_slots, total, gen_cfg.dtype)
+            self.kv = None
+            if streamed:
+                self.caches = self.exec.init_caches(num_slots, total,
+                                                    gen_cfg.dtype)
+            else:
+                self.cache = init_cache(cfg, num_slots, total, gen_cfg.dtype)
         # host-side per-slot scalars (tiny; converted per step)
         self._cur = np.zeros(num_slots, np.int32)
         self._pos = np.zeros(num_slots, np.int32)
@@ -278,6 +354,14 @@ class ContinuousGenerator(_GeneratorBase):
     @property
     def active_slots(self) -> int:
         return self.table.active_slots
+
+    @property
+    def admit_capacity(self) -> int:
+        """Joins guaranteed to succeed right now (slots AND pages)."""
+        if not self.paged:
+            return self.table.free_slots
+        worst = self.gen_cfg.ctx_len + self.gen_cfg.max_new_tokens
+        return min(self.table.free_slots, self.kv.admit_capacity(worst))
 
     def _scatter_row(self, row_cache, slot: int) -> None:
         """Overwrite slot ``slot``'s KV row with a batch=1 cache."""
@@ -310,18 +394,26 @@ class ContinuousGenerator(_GeneratorBase):
         if st.remaining <= 0 or (eos is not None and token == eos):
             st = self.table.release(ref)
             self._cur[ref.index] = 0
-            # park the dead slot's writes on its last position; the row is
-            # fully overwritten by the next join's scatter
+            # park the dead slot's writes on its last position: dense rows
+            # are fully overwritten by the next join's scatter; paged slots
+            # free their pages and point the block table at the trash
+            # page, so the parked writes can never hit a reissued page
+            if self.paged:
+                self.kv.release(ref.index)
             self._finished.append(
                 (st.key, self.tok.decode(st.tokens), list(st.tokens)))
 
     # ------------------------------------------------------------- public
     def join(self, key: Any, prompt: str,
              max_new_tokens: Optional[int] = None) -> Optional[SlotRef]:
-        """Prefill ``prompt`` into a free slot; None when the table is full.
+        """Prefill ``prompt`` into a free slot; None when the table is full
+        or (paged) the page pool cannot cover the request's worst case.
 
         The first token is emitted by the prefill itself (same as the
         whole-batch loop), so a budget of 1 finishes without any step.
+        With chunked prefill the slot is leased immediately but the
+        first token only appears after the last chunk lands (the chunks
+        ride subsequent ``step`` calls, interleaved with live decode).
         """
         g = self.gen_cfg
         req = g.max_new_tokens if max_new_tokens is None else max_new_tokens
@@ -330,39 +422,204 @@ class ContinuousGenerator(_GeneratorBase):
         ref = self.table.acquire(key, pos=g.ctx_len, remaining=budget)
         if ref is None:
             return None
+        if self.paged and not self.kv.admit(ref.index, g.ctx_len + budget):
+            self.table.release(ref)         # page backpressure
+            return None
+        if self.prefill_chunk is not None:
+            # park decode writes on the last position: its page is either
+            # unallocated (-> trash) or self-overwritten by the final
+            # decode step before it is ever read
+            self._prefilling[ref.index] = _ChunkJob(
+                ref=ref, toks=self.tok.encode(prompt, g.ctx_len))
+            self._cur[ref.index] = 0
+            self._pos[ref.index] = self._total - 1
+            return ref
         toks = jnp.asarray(self.tok.encode(prompt, g.ctx_len)[None])
         if self.streamed:
             row = self.exec.init_caches(1, self._total, g.dtype)
             logits, row = self.exec.prefill(toks, row)
+            if self.paged:
+                self.caches = self.kv.scatter_row_layered(
+                    self.caches, row, ref.index, g.ctx_len)
+            else:
+                self._scatter_row(row, ref.index)
         else:
             row = init_cache(self.cfg, 1, self._total, g.dtype)
             logits, row = self._prefill(self.params, toks, row)
-        self._scatter_row(row, ref.index)
+            if self.paged:
+                self.cache = self.kv.scatter_row_stacked(
+                    self.cache, row, ref.index, g.ctx_len)
+            else:
+                self._scatter_row(row, ref.index)
         self._emit(ref, int(np.asarray(jnp.argmax(logits, axis=-1))[0]))
         return ref
 
-    def step(self) -> int:
-        """Advance every live slot one greedy decode step.
+    def _advance_prefills(self) -> int:
+        """Prefill one chunk for every joining slot (paged mode only).
 
-        Returns the number of slots stepped (0 = idle, nothing ran).
+        On the **streamed** path, slots whose next chunk has the same
+        width ride ONE batched call (per-row ``q_offset`` handles their
+        differing offsets, the batch is padded to a power of two with
+        all-trash block-table rows to bound retraces), so the offloaded
+        layers stream host->device once per width group — not once per
+        joiner.  On the resident-weight Model path there is no transfer
+        to amortize, so per-slot batch=1 calls keep the jit at exactly
+        one compiled shape per chunk width.  Per-row compute is
+        batch-size invariant, so neither choice changes tokens.
         """
-        refs = self.table.active_refs()
+        g = self.gen_cfg
+        groups: Dict[int, List[Tuple[int, _ChunkJob]]] = {}
+        for slot in sorted(self._prefilling):
+            job = self._prefilling[slot]
+            c = min(self.prefill_chunk, g.ctx_len - job.offset)
+            groups.setdefault(c, []).append((slot, job))
+        finished: List[Tuple[int, int]] = []
+        for c, members in sorted(groups.items()):
+            for slot, job in members:
+                self.kv.ensure(slot, job.offset + c)
+            tab = self.kv.device_tab()
+            if not self.streamed:
+                for slot, job in members:
+                    chunk = jnp.asarray(
+                        job.toks[None, job.offset:job.offset + c])
+                    off = jnp.full((1,), job.offset, jnp.int32)
+                    logits, self.cache = self._chunk_paged(
+                        self.params, chunk, self.cache, off,
+                        tab[slot:slot + 1])
+                    job.offset += c
+                    if job.offset >= g.ctx_len:
+                        finished.append(
+                            (slot,
+                             int(np.asarray(jnp.argmax(logits, -1))[0])))
+                continue
+            n = len(members)
+            padn = 1 << (n - 1).bit_length()
+            rows = np.stack([job.toks[job.offset:job.offset + c]
+                             for _, job in members])
+            offs = [job.offset for _, job in members]
+            bt = tab[jnp.asarray([slot for slot, _ in members])]
+            if padn > n:        # pad rows write to trash, logits ignored
+                rows = np.concatenate(
+                    [rows, np.zeros((padn - n, c), rows.dtype)])
+                offs = offs + [0] * (padn - n)
+                bt = jnp.concatenate(
+                    [bt, jnp.zeros((padn - n, self.kv.nmax), jnp.int32)])
+            logits, self.caches = self.exec.prefill_chunk(
+                jnp.asarray(rows), self.caches,
+                jnp.asarray(offs, jnp.int32), block_tab=bt,
+                kv_span=g.ctx_len)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for i, (slot, job) in enumerate(members):
+                job.offset += c
+                if job.offset >= g.ctx_len:
+                    finished.append((slot, int(nxt[i])))
+        progressed = len(self._prefilling)
+        for slot, token in finished:
+            job = self._prefilling.pop(slot)
+            self._emit(job.ref, token)      # first token, as full prefill
+        return progressed
+
+    def step(self) -> int:
+        """Advance every live slot one greedy decode step (and every
+        joining slot one prefill chunk, in paged chunked mode).
+
+        Returns the number of slots that made progress (0 = idle).
+        """
+        progressed = 0
+        if self._prefilling:
+            progressed += self._advance_prefills()
+        refs = [r for r in self.table.active_refs()
+                if r.index not in self._prefilling]
         if not refs:
-            return 0
+            if progressed:
+                self.steps += 1
+            return progressed
+        if self.paged:
+            # allocate the page each live slot's pending write needs
+            for ref in refs:
+                self.kv.ensure(ref.index, int(self._pos[ref.index]) + 1)
+            bt = self.kv.device_tab()
         cur = jnp.asarray(self._cur)[:, None]
         pos = jnp.asarray(self._pos)
         if self.streamed:
-            mask = jnp.asarray(self.table.mask())
-            logits, self.caches = self.exec.decode(cur, self.caches, pos,
-                                                   slot_mask=mask)
+            mask = self.table.mask()
+            for slot in self._prefilling:       # still prefilling != live
+                mask[slot] = False
+            mask = jnp.asarray(mask)
+            if self.paged:
+                logits, self.caches = self.exec.decode(
+                    cur, self.caches, pos, slot_mask=mask, block_tab=bt,
+                    kv_span=self._total)
+            else:
+                logits, self.caches = self.exec.decode(cur, self.caches,
+                                                       pos, slot_mask=mask)
         else:
-            logits, self.cache = self._decode(self.params, cur, self.cache,
-                                              pos)
+            if self.paged:
+                logits, self.cache = self._decode_paged(
+                    self.params, cur, self.cache, pos, bt)
+            else:
+                logits, self.cache = self._decode(self.params, cur,
+                                                  self.cache, pos)
         nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
         for ref in refs:
             self._emit(ref, int(nxt[ref.index]))
         self.steps += 1
-        return len(refs)
+        return len(refs) + progressed
+
+    # -------------------------------------------------- dynamic capacity
+    def resize(self, num_slots: int) -> int:
+        """Grow/shrink the slot table; returns the actual capacity.
+
+        Shrink only drops free top slots (never live work).  Paged mode
+        touches just the block table; dense mode pads/slices the cache
+        rows (the decode jit retraces at the new batch, which is why the
+        engine only retargets at policy boundaries).
+        """
+        actual = self.table.resize(num_slots)
+        if actual == self.num_slots:
+            return actual
+        keep = min(actual, self.num_slots)
+        for name in ("_cur", "_pos"):
+            arr = np.zeros(actual, np.int32)
+            arr[:keep] = getattr(self, name)[:keep]
+            setattr(self, name, arr)
+        if self.paged:
+            self.kv.resize_slots(actual)
+        elif self.streamed:
+            self.caches = kvpool.resize_cache_rows(self.caches, actual)
+        else:
+            self.cache = kvpool.resize_cache_rows(self.cache, actual)
+        self.num_slots = actual
+        return actual
+
+    def set_page_budget(self, pages: int) -> int:
+        """Retarget the paged pool's usable-page budget (paged only)."""
+        assert self.paged, "set_page_budget requires paged=True"
+        pools = self.caches if self.streamed else self.cache
+        pools, actual = self.kv.resize_pages(pools, pages)
+        if self.streamed:
+            self.caches = pools
+        else:
+            self.cache = pools
+        return actual
+
+    def retarget(self, num_slots: Optional[int] = None,
+                 page_budget: Optional[int] = None) -> Dict[str, int]:
+        """Policy-boundary hook: apply the live placement's capacity.
+
+        The page budget is clamped to what the block tables can address
+        (``num_slots * nmax`` — anything beyond is device memory no slot
+        could ever reference) and floored at one worst-case request
+        (``nmax`` pages) so the pool can never starve admission.
+        """
+        out: Dict[str, int] = {}
+        if num_slots is not None:
+            out["slots"] = self.resize(num_slots)
+        if page_budget is not None and self.paged:
+            budget = max(min(page_budget, self.num_slots * self.kv.nmax),
+                         self.kv.nmax)
+            out["pages"] = self.set_page_budget(budget)
+        return out
 
     def harvest(self) -> List[Tuple[Any, str, List[int]]]:
         """Drain (key, text, tokens) for rows finished since last call."""
@@ -385,7 +642,7 @@ class ContinuousGenerator(_GeneratorBase):
             if schedule is not None and tick < len(schedule):
                 allow = min(allow, schedule[tick])
             joined = 0
-            while pending and joined < allow and self.free_slots:
+            while pending and joined < allow and self.admit_capacity > 0:
                 key, prompt = pending.pop()
                 assert self.join(key, prompt) is not None
                 joined += 1

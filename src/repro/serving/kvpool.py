@@ -1,0 +1,367 @@
+"""Paged KV-cache subsystem: block-table page pool for continuous batching.
+
+Dense continuous batching (PR 2) gives every slot a worst-case
+``ctx_len + max_new_tokens`` KV row, so GPU KV memory — the scarcest
+resource in RAGDoll's joint placement problem — is provisioned for the
+longest possible request.  This module replaces those rows with
+vLLM-style paging:
+
+``PagePool``
+    Pure host-side bookkeeping (no JAX): a free-list of fixed-size KV
+    *pages* plus per-slot *block tables*.  Page id 0 is a reserved
+    **trash page** that is never allocated — freed slots' block tables
+    are reset to it, so a recycled slot's parked decode writes can never
+    corrupt a page that has been re-issued to another slot.  ``admit``
+    reserves a request's worst-case page count up front (so a request
+    can never hit mid-decode exhaustion), while ``ensure`` allocates
+    pages lazily as the sequence actually grows.  Invariants are
+    property-tested in ``tests/test_paged.py``: pages never leak, no
+    page is ever leased twice, ``len(block_table) ==
+    ceil(written_len / page_size)`` exactly, and reservations are always
+    backed by free pages.
+
+``PagedKVCache``
+    The device-facing half: builds pooled KV arrays where every dense
+    cache leaf ``(B, S, kv_heads, head_dim)`` becomes
+    ``(num_pages + 1, page_size, kv_heads, head_dim)`` (row 0 = trash
+    page), owns the shared ``(num_slots, max_blocks)`` int32 block
+    table, and scatters batch=1 prefill rows into pages.  **Block-table
+    layout:** logical position ``p`` of slot ``s`` lives at
+    ``(block_tab[s, p // page_size], p % page_size)`` in every layer's
+    pool; the table is shared across layers because all layers advance
+    in lockstep.  Attention gathers pages back through the table
+    (``ops.paged_decode_attention``), so per-row compute stays
+    bit-identical to the dense layout on the gather backend.
+
+**Page-budget ↔ placement coupling:** the engine's policy boundary
+retargets ``PagePool.resize`` from the live placement via
+``PlacementOptimizer.kv_page_budget`` — the KV bytes the placement puts
+on the accelerator, divided by ``CostModel.kv_page_bytes``.  Because a
+request only reserves ``ceil((ctx + its_budget) / page_size)`` pages,
+the same GPU KV byte budget admits a strictly larger concurrent batch
+than dense worst-case rows whenever budgets/contexts are heterogeneous,
+and the freed bytes flow back into the placement's host partition cache
+trade-off at page granularity.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+TRASH_PAGE = 0
+
+
+class PageExhausted(RuntimeError):
+    """The pool cannot supply the pages a live sequence needs."""
+
+
+class PagePool:
+    """Free-list of fixed-size KV pages with per-slot block tables.
+
+    ``capacity`` counts *usable* pages (ids ``1..capacity``); id 0 is
+    the reserved trash page.  ``admit`` books a worst-case reservation,
+    ``ensure`` draws pages lazily (first from the slot's reservation,
+    then from unreserved spares), ``release`` returns everything.
+    """
+
+    def __init__(self, capacity: int, page_size: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.page_size = page_size
+        self._capacity = capacity
+        self._free: List[int] = list(range(capacity, 0, -1))  # pop() -> 1
+        self._tables: Dict[Any, List[int]] = {}
+        self._reserved: Dict[Any, int] = {}
+
+    # ------------------------------------------------------------ queries
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return sum(len(t) for t in self._tables.values())
+
+    @property
+    def reserved_pages(self) -> int:
+        return sum(self._reserved.values())
+
+    @property
+    def available_pages(self) -> int:
+        """Free pages not backing any slot's reservation."""
+        return self.free_pages - self.reserved_pages
+
+    def blocks_for(self, length: int) -> int:
+        return -(-max(length, 0) // self.page_size)
+
+    def table(self, key: Any) -> List[int]:
+        return list(self._tables[key])
+
+    def holders(self) -> List[Any]:
+        return list(self._tables)
+
+    def can_admit(self, length: int) -> bool:
+        return self.blocks_for(length) <= self.available_pages
+
+    def admit_capacity(self, length: int) -> int:
+        """How many worst-case-``length`` requests fit right now."""
+        need = self.blocks_for(length)
+        if need == 0:
+            return self._capacity
+        return self.available_pages // need
+
+    # ---------------------------------------------------------- lifecycle
+    def admit(self, key: Any, length: int) -> bool:
+        """Reserve ``blocks_for(length)`` pages for a joining request."""
+        if key in self._tables:
+            raise ValueError(f"slot {key!r} already holds pages")
+        need = self.blocks_for(length)
+        if need > self.available_pages:
+            return False
+        self._tables[key] = []
+        self._reserved[key] = need
+        return True
+
+    def ensure(self, key: Any, length: int) -> List[int]:
+        """Grow ``key``'s block table to cover ``length`` positions.
+
+        Returns the newly allocated page ids (possibly empty).  Draws
+        from the slot's reservation first, then from unreserved spares;
+        raises :class:`PageExhausted` if the pool cannot cover it.
+        """
+        tab = self._tables[key]
+        need = self.blocks_for(length) - len(tab)
+        if need <= 0:
+            return []
+        res = self._reserved.get(key, 0)
+        extra = max(0, need - res)
+        if extra > self.available_pages:
+            raise PageExhausted(
+                f"need {need} pages for slot {key!r}, "
+                f"reservation {res} + available {self.available_pages}")
+        new = [self._free.pop() for _ in range(need)]
+        tab.extend(new)
+        self._reserved[key] = max(0, res - need)
+        return new
+
+    def release(self, key: Any) -> int:
+        """Free every page (and reservation) held by ``key``."""
+        tab = self._tables.pop(key)       # KeyError = double free
+        self._reserved.pop(key, None)
+        self._free.extend(reversed(tab))  # low ids pop first again
+        return len(tab)
+
+    # ------------------------------------------------------------- resize
+    def resize(self, target: int) -> int:
+        """Retarget the usable-page capacity; returns the actual size.
+
+        Growth mints fresh ids; shrink removes a contiguous run of free
+        pages from the top, clamped so no in-use page and no backed
+        reservation is ever dropped.
+        """
+        target = max(int(target), 1)
+        if target > self._capacity:
+            self._free.extend(range(self._capacity + 1, target + 1))
+            self._capacity = target
+            return self._capacity
+        in_use_max = max((p for t in self._tables.values() for p in t),
+                        default=0)
+        floor = max(target, in_use_max)
+        budget = self.free_pages - self.reserved_pages
+        free_set = set(self._free)
+        new_cap = self._capacity
+        while new_cap > floor and budget > 0 and new_cap in free_set:
+            free_set.remove(new_cap)
+            new_cap -= 1
+            budget -= 1
+        self._free = sorted(free_set, reverse=True)
+        self._capacity = new_cap
+        return self._capacity
+
+
+# ---------------------------------------------------------------------------
+# device-facing paged cache
+# ---------------------------------------------------------------------------
+
+def _attn_only_kinds(cfg: ModelConfig) -> None:
+    bad = {k for k, _ in cfg.layer_kinds()} - {"attn", "local"}
+    if bad or cfg.encdec:
+        raise NotImplementedError(
+            f"paged KV cache supports attn/local mixers only, got "
+            f"{sorted(bad)}{' + encdec' if cfg.encdec else ''}")
+
+
+def resize_cache_rows(pools, rows: int):
+    """Pad (zeros) or slice a cache pytree's leading row axis to ``rows``.
+
+    Handles both cache layouts: the stacked ``Model`` dict (row axis 1
+    under ``"blocks"``, 0 under ``"prefix"``) and the streamed per-layer
+    list (row axis 0).  "Rows" are pool pages here and dense slot rows
+    in ``ContinuousGenerator.resize`` — the dispatch is identical.
+    """
+    def fit(t, axis):
+        if rows > t.shape[axis]:
+            pad = [(0, 0)] * t.ndim
+            pad[axis] = (0, rows - t.shape[axis])
+            return jnp.pad(t, pad)
+        return jax.lax.slice_in_dim(t, 0, rows, axis=axis)
+
+    if isinstance(pools, dict):               # stacked Model layout
+        new = dict(pools)
+        new["blocks"] = jax.tree.map(lambda t: fit(t, 1), pools["blocks"])
+        if "prefix" in pools:
+            new["prefix"] = jax.tree.map(lambda t: fit(t, 0),
+                                         pools["prefix"])
+        return new
+    return [jax.tree.map(lambda t: fit(t, 0), c) for c in pools]
+
+
+class PagedKVCache:
+    """Pooled KV arrays + shared block table for one generator.
+
+    The pool *arrays* live in the caller's cache pytree (so jit donation
+    keeps working); this object owns the bookkeeping (:class:`PagePool`),
+    the host block table, and its lazily refreshed device mirror.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, total_len: int,
+                 page_size: int, num_pages: Optional[int] = None,
+                 dtype=jnp.float32):
+        _attn_only_kinds(cfg)
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.total_len = total_len
+        self.page_size = page_size
+        self.nmax = -(-total_len // page_size)
+        worst = num_slots * self.nmax
+        self.pool = PagePool(worst if num_pages is None else num_pages,
+                             page_size)
+        self.dtype = dtype
+        self._tab = np.zeros((num_slots, self.nmax), np.int32)  # TRASH_PAGE
+        self._tab_dev: Optional[jnp.ndarray] = None
+
+    # ------------------------------------------------------ array builders
+    @property
+    def array_pages(self) -> int:
+        """Leading pool-array dim: usable pages + the trash page row 0."""
+        return self.pool.capacity + 1
+
+    def init_stacked(self):
+        """Pooled cache pytree for the scan-based ``Model`` path."""
+        from repro.models import model as M
+        specs = M.make_cache_specs(self.cfg, self.array_pages,
+                                   self.page_size, self.dtype)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+    def init_layered(self, kinds: Sequence) -> List[dict]:
+        """Per-layer pooled caches for the ``StreamedExecutor`` path."""
+        from repro.models import model as M
+        out = []
+        for kind in kinds:
+            spec = M._layer_cache_spec(self.cfg, kind[0], self.array_pages,
+                                       self.page_size, self.dtype, None)
+            out.append(jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                    spec))
+        return out
+
+    # -------------------------------------------------------- block table
+    def device_tab(self) -> jnp.ndarray:
+        if self._tab_dev is None:
+            self._tab_dev = jnp.asarray(self._tab)
+        return self._tab_dev
+
+    def slot_tab(self, slot: int) -> jnp.ndarray:
+        """(1, nmax) block-table row for a batch=1 chunk prefill."""
+        return self.device_tab()[slot:slot + 1]
+
+    def _sync(self, slot: int, pages: List[int]) -> None:
+        if pages:
+            tab = self.pool.table(slot)
+            self._tab[slot, :len(tab)] = tab
+            self._tab_dev = None
+
+    # ----------------------------------------------------------- lifecycle
+    def admit(self, slot: int, length: int) -> bool:
+        return self.pool.admit(slot, length)
+
+    def ensure(self, slot: int, length: int) -> None:
+        self._sync(slot, self.pool.ensure(slot, length))
+
+    def release(self, slot: int) -> None:
+        self.pool.release(slot)
+        self._tab[slot, :] = TRASH_PAGE
+        self._tab_dev = None
+
+    def admit_capacity(self, length: int) -> int:
+        return self.pool.admit_capacity(length)
+
+    # ------------------------------------------------------------ scatter
+    def scatter_row_stacked(self, cache, row_cache, slot: int,
+                            length: int):
+        """Scatter a batch=1 dense prefill row's ``[0:length]`` prefix
+        into the slot's pages (stacked ``{"blocks","prefix"}`` layout)."""
+        self.ensure(slot, length)
+        pages, offs = self._page_index(slot, length)
+
+        new = dict(cache)
+        new["blocks"] = jax.tree.map(
+            lambda t, r: t.at[:, pages, offs].set(
+                r[:, 0, :length].astype(t.dtype)),
+            cache["blocks"], row_cache["blocks"])
+        if "prefix" in cache:
+            new["prefix"] = jax.tree.map(
+                lambda t, r: t.at[pages, offs].set(
+                    r[0, :length].astype(t.dtype)),
+                cache["prefix"], row_cache["prefix"])
+        return new
+
+    def scatter_row_layered(self, caches, row_caches, slot: int,
+                            length: int):
+        """Same, for the per-layer list layout of ``StreamedExecutor``."""
+        self.ensure(slot, length)
+        pages, offs = self._page_index(slot, length)
+        return [
+            jax.tree.map(
+                lambda t, r: t.at[pages, offs].set(
+                    r[0, :length].astype(t.dtype)), tc, rc)
+            for tc, rc in zip(caches, row_caches)]
+
+    def _page_index(self, slot: int, length: int):
+        idx = np.arange(length)
+        pages = jnp.asarray(self._tab[slot, idx // self.page_size])
+        offs = jnp.asarray((idx % self.page_size).astype(np.int32))
+        return pages, offs
+
+    # -------------------------------------------------------------- resize
+    def resize_slots(self, num_slots: int) -> None:
+        if num_slots == self.num_slots:
+            return
+        tab = np.zeros((num_slots, self.nmax), np.int32)
+        keep = min(num_slots, self.num_slots)
+        tab[:keep] = self._tab[:keep]
+        self._tab = tab
+        self._tab_dev = None
+        self.num_slots = num_slots
+
+    def resize_pages(self, pools, target: int):
+        """Retarget the page budget; returns (new_pools, actual_pages).
+
+        Growth zero-pads the pooled arrays, shrink slices — the pool
+        guarantees dropped page ids are free.
+        """
+        old = self.pool.capacity
+        actual = self.pool.resize(target)
+        if actual == old:
+            return pools, actual
+        return resize_cache_rows(pools, actual + 1), actual

@@ -77,6 +77,12 @@ class SimConfig:
     # benchmark comparisons stay like-for-like)
     continuous: Optional[bool] = None
     policy_every: int = 4          # decode steps between policy consults
+    # paged KV modelling (continuous mode only): joiners must reserve
+    # ceil((in_len + out_len) / page_size) pages from the placement's
+    # page budget; exhaustion defers the join (backpressure) instead of
+    # over-committing KV memory
+    paged: bool = False
+    page_size: int = 16
 
 
 @dataclass
@@ -234,7 +240,13 @@ class ServingSimulator:
         (paying a prefill for the joining group); finished requests leave
         the step they emit their last token, freeing the slot immediately.
         The placement/batch policy is consulted every ``policy_every``
-        steps, so capacity tracks the backlog *within* a generation."""
+        steps, so capacity tracks the backlog *within* a generation.
+
+        With ``paged=True`` the slot admission additionally models the
+        paged KV pool: a joiner reserves its worst-case page count from
+        the placement's page budget and stays queued when the pool is
+        exhausted (join backpressure) — the budget itself is retargeted
+        from the live placement at every policy consult."""
         s = self.sim
         n = len(reqs)
         ret_q: List[Request] = []
@@ -249,7 +261,14 @@ class ServingSimulator:
             seq += 1
         ret_busy = gen_running = False
         active: List[List] = []          # [request, tokens_remaining]
-        cap = {"b": 1, "p": self._placement(1), "steps": 0}
+        req_pages = -(-(s.in_len + s.out_len) // s.page_size)
+
+        def page_budget(p: Placement) -> int:
+            # floor of one request so a tiny placement can still progress
+            return max(self.opt.kv_page_budget(p, s.page_size), req_pages)
+
+        cap = {"b": 1, "p": self._placement(1), "steps": 0,
+               "pages": page_budget(self._placement(1)), "reserved": 0}
         now = 0.0
 
         def start_ret(t):
@@ -274,13 +293,18 @@ class ServingSimulator:
 
         def gen_step(t):
             nonlocal seq, gen_running, gpu_busy
-            # admit arrivals into free slots (join at this step boundary)
+            # admit arrivals into free slots (join at this step boundary);
+            # paged mode also reserves KV pages — exhaustion defers joins
             joiners = []
             while ctx_q and len(active) < cap["b"]:
+                if s.paged and cap["reserved"] + req_pages > cap["pages"]:
+                    break                     # page exhaustion: backpressure
                 r = ctx_q.pop(0)
                 r.t_gen_start = t
                 joiners.append(r)
                 active.append([r, s.out_len])
+                if s.paged:
+                    cap["reserved"] += req_pages
             if not active:
                 gen_running = False
                 return
@@ -290,9 +314,13 @@ class ServingSimulator:
                 cap["b"] = max(min(b, s.max_batch), 1)
                 cap["p"] = self._placement(cap["b"])
                 p = cap["p"]
+                if s.paged:
+                    cap["pages"] = page_budget(p)
                 trace.append({"t": t, "batch": len(active),
                               "P": p.resident_partitions, "c_gpu": p.c_gpu,
                               "w_gpu": p.w_gpu, "backlog": len(ctx_q),
+                              "pages_free": (cap["pages"] - cap["reserved"]
+                                             if s.paged else None),
                               "nprobe": self._nprobe(p)
                               or self.cost.num_partitions})
             cap["steps"] += 1
@@ -312,6 +340,8 @@ class ServingSimulator:
                 active.remove(slot)      # leave the step the row finishes
                 slot[0].t_gen_end = t + dur
                 done.append(slot[0])
+                if s.paged:              # pages freed the step it leaves
+                    cap["reserved"] -= req_pages
             gen_running = True
             heapq.heappush(ev, (t + dur, seq, "gen_step", None))
             seq += 1

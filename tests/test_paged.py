@@ -1,0 +1,413 @@
+"""Paged KV-cache subsystem: equivalence, pool properties, kernel, policy.
+
+Headline contract: a *paged* ``ContinuousGenerator`` (shared page pool +
+block tables, optionally with chunked prefill) is **token-identical** to
+the dense whole-batch ``Generator`` under greedy decode, on both the
+scan-based ``Model`` path and the offloading ``StreamedExecutor`` path.
+The gather backend attends over exactly the dense view shape, and per-row
+compute is batch-size invariant on CPU XLA (see test_continuous.py), so
+the equality is exact — not approximate.
+
+The ``PagePool`` property suite (hypothesis) mirrors ``test_slots.py``:
+no page leaks, no double free, block-table/length consistency,
+reservations always backed by free pages, trash page never issued.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.models.model import Model
+from repro.serving.generator import (ContinuousGenerator, Generator,
+                                     GeneratorConfig, SlotTable)
+from repro.serving.kvpool import (PageExhausted, PagePool, PagedKVCache,
+                                  TRASH_PAGE)
+
+CTX, MAX_NEW = 16, 5
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    params = Model(cfg, remat=False).init(jax.random.PRNGKey(0),
+                                          jnp.float32)
+    return cfg, params
+
+
+def _prompts(n=6):
+    return [f"query {i} topic{i % 3} alpha beta" for i in range(n)]
+
+
+def _random_schedule(seed, ticks=40, max_joins=3):
+    rng = np.random.default_rng(seed)
+    return [int(rng.integers(0, max_joins)) for _ in range(ticks)]
+
+
+# ---------------------------------------------------------------- equivalence
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_paged_token_identical_to_whole_batch(tiny_model, seed):
+    """Randomized join/leave schedules on the paged pool never change
+    greedy outputs vs the dense whole-batch reference."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _prompts()
+    dense = Generator(cfg, params, g, streamed=False).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=3, streamed=False,
+                               paged=True, page_size=4)
+    out = cont.run(prompts, schedule=_random_schedule(seed))
+    assert out == dense
+    # slot + page reuse happened and everything was returned
+    assert cont.free_slots == cont.num_slots
+    assert cont.kv.pool.used_pages == 0
+    assert cont.kv.pool.reserved_pages == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_paged_token_identical_streamed(tiny_model, seed):
+    """Same contract through the offloading StreamedExecutor path."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _prompts()
+    dense = Generator(cfg, params, g, streamed=True).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=3, streamed=True,
+                               paged=True, page_size=4)
+    assert cont.run(prompts, schedule=_random_schedule(seed)) == dense
+
+
+@pytest.mark.parametrize("streamed", [False, pytest.param(True,
+                                                          marks=pytest.mark.slow)])
+def test_chunked_prefill_interleaves_with_decode(tiny_model, streamed):
+    """Chunked prefill (prompt split across steps) stays token-identical
+    while live slots keep decoding — verified to actually interleave."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _prompts()
+    dense = Generator(cfg, params, g, streamed=streamed).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=3,
+                               streamed=streamed, paged=True, page_size=4,
+                               prefill_chunk=7)     # 16 -> chunks 7/7/2
+    pending = list(enumerate(prompts))[::-1]
+    results = [None] * len(prompts)
+    overlap = 0
+    while pending or cont.active_slots:
+        if pending and cont.admit_capacity > 0:     # one join per tick
+            key, prompt = pending.pop()
+            assert cont.join(key, prompt) is not None
+        live = sum(1 for r in cont.table.active_refs()
+                   if r.index not in cont._prefilling)
+        if cont._prefilling and live:
+            overlap += 1           # a chunk rides a live decode step
+        cont.step()
+        for key, text, _ in cont.harvest():
+            results[key] = text
+    assert results == dense
+    assert overlap > 0, "chunked prefill never interleaved with decode"
+
+
+def test_paged_eos_exit_and_page_release(tiny_model):
+    """EOS leaves mid-budget: pages come back the step the slot leaves,
+    and outputs still match the whole-batch trim."""
+    cfg, params = tiny_model
+    base = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _prompts(4)
+    plain = Generator(cfg, params, base, streamed=False).generate(prompts)
+    eos = int(plain[0].split()[2][3:])
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW, eos_id=eos)
+    dense = Generator(cfg, params, g, streamed=False).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                               paged=True, page_size=4)
+    out = cont.run(prompts, schedule=_random_schedule(7))
+    assert out == dense
+    assert len(dense[0].split()) <= 3            # the trim actually bit
+    assert cont.kv.pool.used_pages == 0
+
+
+def test_page_backpressure_defers_joins(tiny_model):
+    """With slots free but pages exhausted, join returns None; the slot
+    lease is rolled back and the join succeeds after a release."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=4)
+    # budget covers exactly one worst-case request
+    one = -(-(CTX + 4) // 4)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                               paged=True, page_size=4, page_budget=one)
+    assert cont.admit_capacity == 1
+    assert cont.join("a", "alpha") is not None
+    assert cont.free_slots == 1                  # a slot IS free...
+    assert cont.admit_capacity == 0              # ...but no pages
+    assert cont.join("b", "beta") is None        # page backpressure
+    assert cont.free_slots == 1                  # lease rolled back
+    while cont.active_slots:
+        cont.step()
+    cont.harvest()
+    assert cont.join("b", "beta") is not None    # pages recycled
+
+
+def test_recycled_slot_never_serves_stale_pages(tiny_model):
+    """A prompt generated through a heavily recycled pool matches a fresh
+    generator — no stale KV leaks across page-reused slots."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _prompts(8)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                               paged=True, page_size=2)   # max page churn
+    out = cont.run(prompts)
+    dense = Generator(cfg, params, g, streamed=False).generate(prompts)
+    assert out == dense
+
+
+# ------------------------------------------------------------ dynamic resize
+
+def test_slot_table_resize_invariants():
+    t = SlotTable(4)
+    a = t.acquire("a", pos=0, remaining=2)
+    assert t.resize(8) == 8
+    assert t.free_slots == 7 and t.capacity == 8
+    # shrink clamps to one past the highest active lease
+    b = t.acquire("b", pos=0, remaining=2)       # slot 1
+    assert t.resize(1) == 2
+    assert t.free_slots == 0 and t.active_slots == 2
+    t.release(a)
+    t.release(b)
+    assert t.resize(1) == 1 and t.free_slots == 1
+
+
+def test_slot_table_stale_ref_survives_shrink_grow_cycle():
+    """A SlotRef retained across shrink/grow must stay stale: epoch
+    counters survive the resize, so the old lease can never validate
+    against a fresh lease of the re-grown slot."""
+    from repro.serving.generator import StaleSlotError
+
+    t = SlotTable(4)
+    for i in range(3):
+        t.acquire(f"pad{i}", pos=0, remaining=2)
+    old = t.acquire("x", pos=0, remaining=2)     # slot 3, epoch 0
+    t.release(old)                                # slot 3 -> epoch 1
+    assert t.resize(3) == 3                       # drops free slot 3
+    assert t.resize(4) == 4                       # re-grows it
+    fresh = t.acquire("y", pos=0, remaining=2)    # slot 3 again
+    assert fresh.index == old.index
+    assert fresh.epoch != old.epoch               # new lease, new epoch
+    with pytest.raises(StaleSlotError):
+        t.advance(old, token=0)
+
+
+@pytest.mark.parametrize("paged", [True, False])
+def test_generator_resize_mid_flight(tiny_model, paged):
+    """Capacity grows/shrinks between steps without corrupting live
+    sequences (the engine's dynamic slot-table retarget)."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _prompts(6)
+    dense = Generator(cfg, params, g, streamed=False).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                               paged=paged, page_size=4)
+    pending = list(enumerate(prompts))[::-1]
+    results = [None] * len(prompts)
+    tick = 0
+    while pending or cont.active_slots:
+        if tick == 2:
+            assert cont.resize(4) == 4           # grow mid-flight
+            if paged:
+                cont.set_page_budget(cont.kv.pool.capacity + 8)
+        if tick == 6:
+            cont.resize(2)                        # shrink (clamped to live)
+        while pending and cont.admit_capacity > 0:
+            key, prompt = pending.pop()
+            assert cont.join(key, prompt) is not None
+        cont.step()
+        for key, text, _ in cont.harvest():
+            results[key] = text
+        tick += 1
+    assert results == dense
+    assert cont.free_slots == cont.num_slots
+
+
+def test_page_pool_resize_shrink_respects_in_use():
+    pool = PagePool(8, page_size=4)
+    pool.admit("a", 16)                           # reserve 4
+    pool.ensure("a", 16)
+    assert pool.resize(2) >= 4                    # in-use pages kept
+    assert pool.used_pages == 4
+    pool.release("a")
+    assert pool.resize(2) == 2
+    assert pool.free_pages == 2
+
+
+# ------------------------------------------------------------ kernel parity
+
+def _paged_fixture(rng, b=3, h=8, kvh=4, d=64, page=8, nmax=5):
+    p = 1 + b * nmax
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(p, page, kvh, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(p, page, kvh, d)), jnp.float32)
+    tab = jnp.asarray(rng.permutation(np.arange(1, p))[:b * nmax]
+                      .reshape(b, nmax).astype(np.int32))
+    kv_len = jnp.asarray(rng.integers(1, page * nmax + 1, size=(b,)),
+                         jnp.int32)
+    return q, kp, vp, tab, kv_len
+
+
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_paged_pallas_kernel_matches_reference(rng, softcap):
+    q, kp, vp, tab, kv_len = _paged_fixture(rng)
+    want = ref.paged_decode_attention_reference(q, kp, vp, tab, kv_len,
+                                                softcap=softcap)
+    got = ops.paged_decode_attention(q, kp, vp, tab, kv_len,
+                                     impl="pallas", softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_gather_bitwise_matches_dense_decode(rng):
+    """The gather backend IS the dense einsum path — bit-identical when
+    the block table lays pages out contiguously (the token-identity
+    foundation of the equivalence suite)."""
+    b, h, kvh, d, page, nmax = 2, 8, 4, 64, 8, 4
+    s = page * nmax
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k_dense = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+    v_dense = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+    kv_len = jnp.asarray([5, s], jnp.int32)
+    # identity layout: slot b's block i -> page 1 + b*nmax + i
+    tab = jnp.asarray(
+        1 + np.arange(b * nmax).reshape(b, nmax).astype(np.int32))
+    kp = jnp.concatenate([jnp.zeros((1, page, kvh, d), jnp.float32),
+                          k_dense.reshape(b * nmax, page, kvh, d)])
+    vp = jnp.concatenate([jnp.zeros((1, page, kvh, d), jnp.float32),
+                          v_dense.reshape(b * nmax, page, kvh, d)])
+    want = ops.decode_attention(q, k_dense, v_dense, kv_len, impl="einsum")
+    got = ops.paged_decode_attention(q, kp, vp, tab, kv_len, impl="gather",
+                                     kv_span=s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gather_kv_span_truncates(rng):
+    pool = jnp.asarray(rng.normal(size=(5, 4, 2, 8)), jnp.float32)
+    tab = jnp.asarray([[1, 2, 3]], jnp.int32)
+    dense = ref.gather_paged_kv(pool, tab, kv_span=10)
+    assert dense.shape == (1, 10, 2, 8)
+    np.testing.assert_array_equal(np.asarray(dense[0, 4:8]),
+                                  np.asarray(pool[2]))
+
+
+# -------------------------------------------------- placement page dimension
+
+def test_paged_pool_admits_strictly_more_than_dense_rows():
+    """Fig. 9 workload (512-ctx prompts, 32-token answers): under the
+    SAME GPU KV byte budget, page-granular admission beats dense
+    worst-case rows sized for ctx 1024 + 128 new tokens."""
+    from repro.core.costmodel import GB, PF_HIGH, CostModel, ModelProfile
+    from repro.core.placement import Placement, PlacementOptimizer
+
+    mp = ModelProfile.from_config(get_config("llama3-70b"))
+    cm = CostModel(PF_HIGH, mp, partition_bytes=8 * GB, num_partitions=32)
+    opt = PlacementOptimizer(cm, avg_ctx_len=512, avg_out_len=32,
+                             kv_page_size=16)
+    p = opt.solve(16)
+    if p.c_gpu == 0.0:
+        p = Placement(p.w_gpu, p.w_cpu, 0.5, 0.5, p.resident_partitions,
+                      p.gen_batch, nprobe=p.nprobe)
+    paged = opt.paged_batch_capacity(p, req_len=512 + 32)
+    dense = opt.dense_batch_capacity(p, worst_case_len=1024 + 128)
+    assert paged > dense, (paged, dense)
+    # budget in pages is consistent with the byte budget
+    pages = opt.kv_page_budget(p)
+    assert pages * cm.mp.kv_page_bytes(16) <= opt.kv_gpu_bytes(p)
+
+
+def test_simulator_page_backpressure():
+    """A starved page budget defers joins (backpressure) but the run
+    still completes; the unpaged run admits faster."""
+    from repro.core.costmodel import GB, PF_HIGH, CostModel, ModelProfile
+    from repro.core.placement import PlacementOptimizer
+    from repro.serving.simulator import (ServingSimulator, SimConfig,
+                                         poisson_workload)
+
+    mp = ModelProfile.from_config(get_config("llama3-8b"))
+    arrivals = poisson_workload(rates_per_min=(8, 12), interval_s=120.0,
+                                seed=3)
+
+    def run(paged):
+        cm = CostModel(PF_HIGH, mp, partition_bytes=8 * GB,
+                       num_partitions=32)
+        opt = PlacementOptimizer(cm, 512, 32, kv_page_size=16)
+        sim = ServingSimulator(cm, opt, SimConfig(
+            mode="ragdoll", paged=paged, page_size=16, max_batch=16))
+        return sim.run(list(arrivals))
+
+    res = run(paged=True)
+    assert len(res.requests) == len(arrivals)
+    for r in res.requests:
+        assert r.done and r.t_gen_start >= r.t_ret_end - 1e-9
+    paged_trace = [e for e in res.policy_trace
+                   if e.get("pages_free") is not None]
+    assert paged_trace, "paged run never recorded page state"
+    assert all(e["pages_free"] >= 0 for e in paged_trace)
+    res0 = run(paged=False)
+    assert len(res0.requests) == len(arrivals)
+
+
+def test_engine_policy_boundary_retargets_capacity(tiny_model):
+    """The real engine's policy boundary resizes the slot table and the
+    paged pool's page budget from the live placement (dynamic capacity,
+    ROADMAP item) — exercised directly, without pipeline threads."""
+    import tempfile
+
+    from repro.core.costmodel import GB, PF_HIGH, CostModel, ModelProfile
+    from repro.core.placement import PlacementOptimizer
+    from repro.core.scheduler import BacklogScheduler
+    from repro.retrieval import HashEmbedder, VectorStore
+    from repro.serving.engine import RagdollEngine
+
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=4)
+    gen = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                              paged=True, page_size=4)
+    mp = ModelProfile.from_config(get_config("llama3-8b"))
+    cm = CostModel(PF_HIGH, mp, partition_bytes=8 * GB, num_partitions=8)
+    opt = PlacementOptimizer(cm, 512, 32, kv_page_size=4)
+    emb = HashEmbedder(dim=16)
+    texts = [f"doc {i}" for i in range(40)]
+    with tempfile.TemporaryDirectory() as root:
+        store = VectorStore.build(texts, emb, num_partitions=4, root=root)
+        eng = RagdollEngine(store, emb, gen,
+                            BacklogScheduler(max_batch=8),
+                            BacklogScheduler(max_batch=8), optimizer=opt)
+        try:
+            eng._gen_boundary()
+            ev = eng.policy_trace[-1]
+            assert ev.gen_slots == gen.num_slots       # table retargeted
+            assert ev.kv_pages == gen.kv.pool.capacity  # budget retargeted
+            worst_pages = -(-(CTX + 4) // 4)
+            assert gen.kv.pool.capacity >= worst_pages  # never starved
+            # the engine still decodes correctly at the new capacity
+            assert gen.join("a", "alpha beta") is not None
+            while gen.active_slots:
+                gen.step()
+            assert {k for k, _, _ in gen.harvest()} == {"a"}
+        finally:
+            eng.streamer.close()
+
+
+# ----------------------------------------------- PagePool deterministic edge
+
+def test_pool_rejects_double_admit_and_validates():
+    pool = PagePool(4, 2)
+    assert pool.admit("a", 3)
+    with pytest.raises(ValueError):
+        pool.admit("a", 1)
+    with pytest.raises(ValueError):
+        PagePool(0, 2)
+    with pytest.raises(ValueError):
+        PagePool(2, 0)
+
+
+def test_paged_cache_rejects_non_attention_archs():
+    cfg = get_config("mamba2-370m")
+    with pytest.raises(NotImplementedError):
+        PagedKVCache(cfg, num_slots=2, total_len=32, page_size=8)

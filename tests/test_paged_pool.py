@@ -1,0 +1,108 @@
+"""Property tests for the paged KV-cache page pool.
+
+Arbitrary interleavings of admit (reserve) / ensure (allocate) /
+release / resize must never leak a page, never lease a page twice,
+never issue the trash page, keep every block table exactly
+``ceil(length / page_size)`` long, and keep every reservation backed by
+free pages.  The pool is pure bookkeeping (no JAX), so these run fast
+and exhaustively — the CI fast tier runs them under the bounded
+deterministic hypothesis profile (see tests/conftest.py).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")   # pinned in requirements.txt; skip, never collection-error
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kvpool import (PageExhausted, PagePool, TRASH_PAGE)
+
+POOL_OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "ensure", "grow", "release",
+                               "resize"]),
+              st.integers(min_value=0, max_value=9),
+              st.integers(min_value=0, max_value=40)),
+    max_size=60)
+
+
+def _pool_invariants(pool: PagePool, lengths):
+    leased = [p for k in pool.holders() for p in pool.table(k)]
+    assert len(leased) == len(set(leased))            # no double lease
+    assert TRASH_PAGE not in leased                   # trash never issued
+    assert all(1 <= p <= pool.capacity for p in leased)
+    assert pool.free_pages + pool.used_pages == pool.capacity  # no leaks
+    assert pool.reserved_pages <= pool.free_pages     # reservations backed
+    for k in pool.holders():                          # table/length law
+        assert len(pool.table(k)) == pool.blocks_for(lengths[k])
+
+
+@given(cap=st.integers(min_value=1, max_value=12),
+       page=st.integers(min_value=1, max_value=8), ops=POOL_OPS)
+@settings(max_examples=120)
+def test_pool_interleavings_never_leak_or_double_lease(cap, page, ops):
+    pool = PagePool(cap, page)
+    lengths = {}          # slot -> highest ensured length
+    nxt = 0
+    for op, pick, amount in ops:
+        if op == "admit":
+            if pool.admit(nxt, amount):
+                lengths[nxt] = min(amount, page)
+                pool.ensure(nxt, lengths[nxt])        # first block(s)
+            nxt += 1
+        elif op in ("ensure", "grow") and lengths:
+            k = sorted(lengths)[pick % len(lengths)]
+            want = lengths[k] + amount
+            try:
+                pool.ensure(k, want)
+                lengths[k] = max(lengths[k], want)
+            except PageExhausted:
+                pass                                  # state unchanged
+        elif op == "release" and lengths:
+            k = sorted(lengths)[pick % len(lengths)]
+            pool.release(k)
+            del lengths[k]
+            with pytest.raises(KeyError):             # no double free
+                pool.release(k)
+        elif op == "resize":
+            pool.resize(max(amount, 1))
+        _pool_invariants(pool, lengths)
+
+
+@given(cap=st.integers(min_value=2, max_value=16),
+       page=st.integers(min_value=1, max_value=4),
+       lens=st.lists(st.integers(min_value=1, max_value=30), min_size=1,
+                     max_size=6))
+@settings(max_examples=80)
+def test_pool_admit_reserves_worst_case(cap, page, lens):
+    """An admitted request can always ensure up to its admitted length,
+    no matter what other admitted requests do."""
+    pool = PagePool(cap, page)
+    admitted = []
+    for i, ln in enumerate(lens):
+        if pool.admit(i, ln):
+            admitted.append((i, ln))
+    for i, ln in admitted:                 # reservation honoured in full
+        pool.ensure(i, ln)
+        assert len(pool.table(i)) == pool.blocks_for(ln)
+    for i, _ in admitted:
+        pool.release(i)
+    assert pool.free_pages == pool.capacity
+
+
+@given(cap=st.integers(min_value=2, max_value=10),
+       page=st.integers(min_value=1, max_value=4),
+       targets=st.lists(st.integers(min_value=1, max_value=20), min_size=1,
+                        max_size=8))
+@settings(max_examples=80)
+def test_pool_resize_never_drops_leased_or_reserved_pages(cap, page,
+                                                          targets):
+    pool = PagePool(cap, page)
+    assert pool.admit("a", 2 * page)       # 2 pages reserved
+    pool.ensure("a", page)                 # 1 allocated
+    held = set(pool.table("a"))
+    for t in targets:
+        actual = pool.resize(t)
+        assert actual >= len(held)
+        assert set(pool.table("a")) == held          # lease untouched
+        assert pool.reserved_pages <= pool.free_pages
+        _pool_invariants(pool, {"a": page})
+    pool.ensure("a", 2 * page)             # reservation survives resizes
+    assert len(pool.table("a")) == 2
