@@ -6,7 +6,9 @@ Paper: RAGDoll cuts max latency ~50% vs vLLMRAG, ~80% vs AccRAG (70B).
 real threads/JAX, not the simulator) through its continuous trace and
 reports dense vs paged KV-cache percentiles side by side — the
 ROADMAP item wiring the engine's continuous path into the percentile
-benchmarks."""
+benchmarks — plus a swap-to-host column: at the same starved GPU page
+budget, preemption (``paged_swap``) admits a strictly larger concurrent
+batch than pure join backpressure (``paged_tight``)."""
 from __future__ import annotations
 
 import tempfile
@@ -17,13 +19,32 @@ from repro.serving.baselines import run_suite
 from repro.serving.request import latency_table
 
 
+def _drive_deterministic(eng, reqs):
+    """Single-threaded pump via ``RagdollEngine.pump_once`` so the
+    swap-vs-backpressure mini-trace is deterministic (CI asserts on
+    it) while the scheduling loop itself stays in the engine."""
+    eng._retrieve_batch(reqs)
+    eng.pipeline.context_queue.put_many(reqs)
+    guard = 0
+    while eng.pump_once() < len(reqs):
+        guard += 1
+        assert guard < 100 * len(reqs), "mini-trace stalled"
+    return list(eng.completed)
+
+
 def engine_rows(n_requests: int = 10, num_slots: int = 3,
-                variants=("dense", "paged")):
+                variants=("dense", "paged", "paged_tight", "paged_swap")):
     """Continuous-trace percentiles from the real mini-engine.
 
-    Runs identical request streams through a dense-row and a paged
-    ``ContinuousGenerator`` behind the full ``RagdollEngine`` pipeline
-    and reports p50/p95/mean latency per variant.
+    ``dense`` and ``paged`` run identical request streams behind the
+    full threaded ``RagdollEngine`` pipeline (p50/p95/mean latency).
+    ``paged_tight`` and ``paged_swap`` share one deliberately starved
+    GPU page budget (two worst-case requests) and drive the engine's
+    real admit/step methods single-threaded: ``paged_tight`` has no
+    host pool (pure join backpressure) while ``paged_swap`` funds a
+    host pool, so preemption admits a strictly larger concurrent batch
+    at the same device budget (``peak=`` in the row text; CI asserts
+    the inequality).
     """
     import jax
     import jax.numpy as jnp
@@ -41,34 +62,55 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
                                           jnp.float32)
     emb = HashEmbedder(dim=32)
     texts = [f"doc {i} topic{i % 5}" for i in range(120)]
+    ctx, max_new, page = 32, 4, 8
+    worst = -(-(ctx + max_new) // page)
     rows = []
     with tempfile.TemporaryDirectory() as root:
         store = VectorStore.build(texts, emb, num_partitions=4, root=root)
         store.spill(3)
         for variant in variants:
+            kw = {}
+            if variant == "paged":
+                kw = dict(paged=True, prefill_chunk=16)
+            elif variant in ("paged_tight", "paged_swap"):
+                kw = dict(paged=True, page_budget=2 * worst,
+                          host_page_budget=(num_slots * worst
+                                            if variant == "paged_swap"
+                                            else 0))
             gen = ContinuousGenerator(
-                cfg, params, GeneratorConfig(ctx_len=32, max_new_tokens=4),
-                num_slots=num_slots, streamed=False,
-                paged=(variant == "paged"), page_size=8,
-                prefill_chunk=16 if variant == "paged" else None)
+                cfg, params,
+                GeneratorConfig(ctx_len=ctx, max_new_tokens=max_new),
+                num_slots=num_slots, streamed=False, page_size=page, **kw)
             eng = RagdollEngine(store, emb, gen,
                                 BacklogScheduler(max_batch=8),
                                 BacklogScheduler(max_batch=num_slots),
                                 initial_partitions=3, policy_every=2)
-            eng.start()
-            for i in range(n_requests):
-                eng.submit(Request(rid=i, query=f"query {i}",
-                                   arrival=time.perf_counter()))
-            reqs = eng.drain(n_requests, timeout=180)
-            eng.stop()
+            deterministic = variant in ("paged_tight", "paged_swap")
+            if deterministic:
+                try:
+                    reqs = [Request(rid=i, query=f"query {i}",
+                                    arrival=time.perf_counter())
+                            for i in range(n_requests)]
+                    reqs = _drive_deterministic(eng, reqs)
+                finally:
+                    eng.streamer.close()
+            else:
+                eng.start()
+                for i in range(n_requests):
+                    eng.submit(Request(rid=i, query=f"query {i}",
+                                       arrival=time.perf_counter()))
+                reqs = eng.drain(n_requests, timeout=180)
+                eng.stop()
             assert len(reqs) == n_requests, (variant, len(reqs))
             lat = [r.latency for r in reqs]
-            rows.append((
-                f"fig8/engine/{variant}",
-                1e6 * sum(lat) / len(lat),
-                f"p50={percentile(lat, 50):.3f} "
-                f"p95={percentile(lat, 95):.3f} "
-                f"mean={sum(lat) / len(lat):.3f} n={len(lat)}"))
+            info = (f"p50={percentile(lat, 50):.3f} "
+                    f"p95={percentile(lat, 95):.3f} "
+                    f"mean={sum(lat) / len(lat):.3f} n={len(lat)}")
+            if deterministic:
+                info += (f" peak={gen.peak_in_flight}"
+                         f" swaps={gen.swap_outs}")
+            rows.append((f"fig8/engine/{variant}",
+                         1e6 * sum(lat) / len(lat), info))
     return rows
 
 

@@ -56,4 +56,21 @@ def run(full: bool = False):
                / max(tabs["continuous"]["avg_latency"], 1e-9))
     rows.append(("fig9/continuous_speedup", 0.0,
                  f"mean-latency speedup {speedup:.2f}x"))
+    # paged admission policies at the same GPU page budget: pure join
+    # backpressure vs swap-to-host preemption (the placement's c_cpu KV
+    # share funds the host pool; swaps cost whole-page PCIe transfers)
+    for label, swap in (("paged_backpressure", False), ("paged_swap", True)):
+        sweep = make_simulator(cm, optimizer_factory(cm)(), "ragdoll",
+                               paged=True, swap=swap)
+        sres, sus = timed(lambda: sweep.run(list(arr)))
+        tab = latency_table(sres.requests)
+        paged_tr = [e for e in sres.policy_trace
+                    if e.get("in_flight") is not None]
+        peak = max((e["in_flight"] for e in paged_tr), default=0)
+        parked = max((e["swapped"] or 0 for e in paged_tr), default=0)
+        rows.append((
+            f"fig9/{label}", sus,
+            f"avg_lat={tab['avg_latency']:.1f}s p90={tab['p90']:.1f}s "
+            f"avg_wait={tab['avg_waiting']:.1f}s peak_admitted={peak} "
+            f"peak_parked={parked}"))
     return rows

@@ -229,3 +229,10 @@ class CostModel:
     def placement_shift_time(self, moved_bytes: float) -> float:
         """Lazy dynamic transfer of weights between tiers (background)."""
         return moved_bytes / self.hw.pcie_bw
+
+    # ---------------------------------------------------------------- swap
+    def kv_swap_time(self, pages: int, page_size: int) -> float:
+        """One whole-page KV swap, either direction: ``pages`` pages of
+        ``page_size`` tokens across all layers over the measured PCIe
+        bandwidth (the simulator's preemption latency model)."""
+        return pages * self.mp.kv_page_bytes(page_size) / self.hw.pcie_bw

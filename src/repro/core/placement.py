@@ -106,6 +106,24 @@ class PlacementOptimizer:
                                                 or self.kv_page_size)
         return int(self.kv_gpu_bytes(p) // max(page_bytes, 1.0))
 
+    def kv_host_bytes(self, p: Placement) -> float:
+        """Attention-KV bytes the placement parks on the host — the
+        ``c_cpu * C(B)`` term of Eq. 3, with the same attention-only
+        accounting as :meth:`kv_gpu_bytes`."""
+        return (p.c_cpu * p.gen_batch * (self.avg_ctx + self.avg_out)
+                * self.cost.mp.kv_bytes_per_token)
+
+    def kv_host_page_budget(self, p: Placement,
+                            page_size: Optional[int] = None) -> int:
+        """The ``c_cpu`` KV share expressed in whole pages — the budget
+        the engine hands to ``HostPagePool.resize`` at every policy
+        boundary, exactly like :meth:`kv_page_budget` does for the
+        device pool.  Zero when the placement keeps no KV on the host
+        (swap-to-host is then legitimately unavailable)."""
+        page_bytes = self.cost.mp.kv_page_bytes(page_size
+                                                or self.kv_page_size)
+        return int(self.kv_host_bytes(p) // max(page_bytes, 1.0))
+
     def paged_batch_capacity(self, p: Placement,
                              page_size: Optional[int] = None,
                              req_len: Optional[int] = None) -> int:

@@ -166,7 +166,11 @@ class StreamedExecutor:
         full-row scatter overwrites; on the paged layout
         (``block_tab``/``kv_span`` given) their block tables point at
         the trash page, so the writes can never land in a page reused
-        by another slot.
+        by another slot.  Parked rows (preempted slots whose KV pages
+        were swapped to the host pool) are just dead rows here: the
+        slot mask excludes them and their all-trash table rows absorb
+        the garbage writes until ``resume`` remaps them onto fresh
+        pages.
         """
         cfg = self.cfg
         if slot_mask is not None \

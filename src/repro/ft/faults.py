@@ -5,7 +5,11 @@
   whole sweep.
 * Generation OOM triggers the recovery ladder (demote KV -> demote
   weights -> release partitions -> shrink batch) via
-  ``PlacementOptimizer.project`` — never a full restart.
+  ``PlacementOptimizer.project`` — never a full restart.  The demoted
+  ``c_gpu``→``c_cpu`` KV shift is consumed by the paged generator's
+  page pools (``OOMRecovery.apply_placement``): the device budget
+  shrinks and the host swap pool grows, so degraded placements preempt
+  (swap-to-host) instead of starving joins.
 """
 from __future__ import annotations
 
@@ -86,12 +90,34 @@ class OOMRecovery:
 
     ``run(fn, placement)`` executes fn(placement); on OOM it demotes the
     placement one rung (more KV to host, then weights, then fewer resident
-    partitions, then half the batch) and retries.
+    partitions, then half the batch) and retries.  When a live paged
+    generator is attached (``run(..., generator=...)`` or an explicit
+    :meth:`apply_placement`), each demoted placement is pushed into its
+    KV page pools, so the ladder's first rung — shifting KV from
+    ``c_gpu`` to ``c_cpu`` — immediately funds swap-to-host headroom:
+    page-starved joins preempt (swap out the lowest-priority slot)
+    instead of starving.
     """
 
     opt: PlacementOptimizer
     max_attempts: int = 6
     history: List[Placement] = field(default_factory=list)
+
+    def apply_placement(self, generator, placement: Placement
+                        ) -> Dict[str, int]:
+        """Push a (demoted) placement into a live paged generator.
+
+        The device page budget retargets to the placement's ``c_gpu``
+        KV share and the host swap pool to the ``c_cpu`` share — the
+        consumer of the ladder's ``c_cpu += 0.25`` shift.  No-op for
+        dense or non-paged generators.
+        """
+        if not getattr(generator, "paged", False):
+            return {}
+        ps = generator.page_size
+        return generator.retarget(
+            page_budget=self.opt.kv_page_budget(placement, ps),
+            host_page_budget=self.opt.kv_host_page_budget(placement, ps))
 
     def demote(self, p: Placement) -> Placement:
         if p.c_gpu > 0:
@@ -109,7 +135,8 @@ class OOMRecovery:
             q = p
         return self.opt.project(q)
 
-    def run(self, fn: Callable[[Placement], object], placement: Placement):
+    def run(self, fn: Callable[[Placement], object], placement: Placement,
+            generator=None):
         p = placement
         for attempt in range(self.max_attempts):
             try:
@@ -123,4 +150,8 @@ class OOMRecovery:
                 if q == p:
                     raise
                 p = q
+                if generator is not None:
+                    # the demoted KV split takes effect immediately:
+                    # less device pool, more swap headroom
+                    self.apply_placement(generator, p)
         raise MemoryError("OOM recovery ladder exhausted")

@@ -14,8 +14,14 @@ The generation stage has two disciplines, chosen by the generator type:
   optimizer's batch policy is consulted every ``policy_every`` decode
   steps (mid-generation, the paper's Fig. 9 behaviour) instead of only at
   whole-batch boundaries.  The policy boundary also retargets the
-  partition cache, the IVF probe width, and the partition streamer's
-  host-memory budget from the live placement.
+  partition cache, the IVF probe width, the partition streamer's
+  host-memory budget, and — for paged generators — both tiers of the KV
+  page placement (device pool from ``kv_page_budget``, host swap pool
+  from ``kv_host_page_budget``) from the live placement.  Admission is
+  swap-aware: when a join would backpressure on pages (or slots) while
+  a lower-priority slot is live, the pump preempts the victim
+  (swap-to-host, vLLM-style) instead of stalling, and swaps parked
+  requests back in FIFO once the join backlog clears.
 
 ``SerialRAGEngine`` is the baseline shape (vLLMRAG/AccRAG-style): one
 worker retrieves then generates per batch, in arrival order.
@@ -52,6 +58,8 @@ class PolicyEvent:
     nprobe: Optional[int] = None
     gen_slots: Optional[int] = None    # live slot-table capacity
     kv_pages: Optional[int] = None     # paged pool budget (paged only)
+    kv_host_pages: Optional[int] = None  # host swap-pool budget (c_cpu)
+    parked: Optional[int] = None       # requests swapped out right now
 
 
 class RagdollEngine:
@@ -88,8 +96,9 @@ class RagdollEngine:
                                 on_batch_boundary=self._ret_boundary)
             gw = StepPumpWorker(
                 "generation", cq, dq,
-                # paged generators also gate admission on free KV pages
-                capacity_fn=lambda: self.generator.admit_capacity,
+                # paged generators also gate admission on free KV pages,
+                # counting joins a swap-out preemption could make room for
+                capacity_fn=self._gen_capacity,
                 admit_fn=self._admit_requests, step_fn=self._generate_step,
                 on_policy_boundary=self._gen_boundary,
                 policy_every=policy_every)
@@ -133,17 +142,69 @@ class RagdollEngine:
         return reqs
 
     # --------------------------------------- continuous generation stage
+    def _gen_capacity(self) -> int:
+        """Joins the pump may pop right now.
+
+        ``admit_capacity`` counts guaranteed admits (free slots AND
+        pages); on a paged generator with host swap room we additionally
+        report one speculative join whenever a preemptible victim
+        exists, so a page-starved (or slot-starved) backlog triggers the
+        swap path instead of waiting for a natural leave.
+        """
+        cap = self.generator.admit_capacity
+        gen = self.generator
+        if (cap == 0 and getattr(gen, "paged", False)
+                and self._swap_victim_fits()):
+            return 1
+        return cap
+
+    def _swap_victim_fits(self) -> bool:
+        gen = self.generator
+        victim = gen.swap_victim()
+        return (victim is not None
+                and gen.kv.can_swap_out(victim.index))
+
+    def _preempt_for_join(self) -> bool:
+        """Swap-aware backpressure relief: park the lowest-priority live
+        slot (longest remaining budget) so a blocked join can take its
+        pages — and its slot.  Returns True when a victim was swapped
+        out; False falls back to pure backpressure (requeue)."""
+        gen = self.generator
+        if not getattr(gen, "paged", False):
+            return False
+        victim = gen.swap_victim()
+        if victim is None:
+            return False
+        return gen.preempt(victim) is not None
+
+    def _resume_parked(self) -> None:
+        """Swap parked requests back in once the join backlog is clear
+        (FIFO over preemption order) — resumed slots decode again the
+        very next step.  Backlogged joins strictly precede resumes so
+        swap never thrashes against admission."""
+        gen = self.generator
+        if (not getattr(gen, "parked_slots", 0)
+                or len(self.pipeline.context_queue)):
+            return
+        for key in gen.parked_keys():
+            if gen.resume(key) is None:
+                break                   # slots/pages exhausted: retry later
+
     def _admit_requests(self, reqs: List[Request]) -> None:
         """Prefill arrivals into free KV slots (join at any decode step).
 
-        ``admit_capacity`` guarantees these joins succeed on the single
-        pump thread; should a ``None`` join ever appear (future async
-        capacity changes), the request returns to the FRONT of the
-        context queue so admission stays FIFO under backpressure.
+        ``admit_capacity`` guarantees those joins succeed on the single
+        pump thread.  A ``None`` join means the pump popped on the
+        speculative swap capacity (or capacity changed asynchronously):
+        preempt victims until the join fits, and only if no victim can
+        be swapped out return the tail to the FRONT of the context queue
+        so admission stays FIFO under backpressure.
         """
         t = time.perf_counter()
         for i, r in enumerate(reqs):
             ref = self.generator.join(r, r.prompt, r.max_new_tokens)
+            while ref is None and self._preempt_for_join():
+                ref = self.generator.join(r, r.prompt, r.max_new_tokens)
             if ref is None:
                 self.pipeline.context_queue.requeue(reqs[i:])
                 return
@@ -152,6 +213,8 @@ class RagdollEngine:
     def _generate_step(self) -> Optional[List[Request]]:
         """One decode step over the slot table; returns rows that left."""
         t0 = time.perf_counter()
+        if getattr(self.generator, "paged", False):
+            self._resume_parked()
         stepped = self.generator.step()
         finished = self.generator.harvest()
         if not stepped and not finished:
@@ -195,12 +258,17 @@ class RagdollEngine:
             # placement's gen_batch; paged generators also retarget their
             # KV page budget from the placement's accelerator KV share
             # (retarget clamps it to the block-table-addressable range)
-            pages = None
+            pages = host_pages = None
             if getattr(self.generator, "paged", False):
                 pages = self.opt.kv_page_budget(
                     placement, self.generator.page_size)
+                # the c_cpu KV share funds the swap pool: a placement
+                # that demotes KV to the host grows preemption headroom
+                host_pages = self.opt.kv_host_page_budget(
+                    placement, self.generator.page_size)
             applied = self.generator.retarget(num_slots=b,
-                                              page_budget=pages)
+                                              page_budget=pages,
+                                              host_page_budget=host_pages)
         else:
             applied = {}
         # couple the partition streamer's lookahead to the host memory the
@@ -215,9 +283,34 @@ class RagdollEngine:
             c_gpu=placement.c_gpu, w_gpu=placement.w_gpu,
             nprobe=placement.nprobe,
             gen_slots=applied.get("slots"),
-            kv_pages=applied.get("pages")))
+            kv_pages=applied.get("pages"),
+            kv_host_pages=applied.get("host_pages"),
+            parked=getattr(self.generator, "parked_slots", None)))
 
     # ------------------------------------------------------------- public
+    def pump_once(self) -> int:
+        """One synchronous generation-pump iteration: capacity probe →
+        admit from the context queue → decode step — the
+        ``StepPumpWorker`` loop body minus the thread and minus the
+        ``policy_every`` boundary consult (deliberately: mini-traces
+        rely on their constructed slot/page budgets staying put, where
+        the boundary would retarget them from the live placement).
+
+        The deterministic seam for mini-traces (the fig8 swap column)
+        and tests — keeps the scheduling loop in one place instead of
+        letting callers re-implement it against private methods.
+        Returns the number of requests completed so far.
+        """
+        assert self.continuous, "pump_once requires a continuous generator"
+        free = self._gen_capacity()
+        items = self.pipeline.context_queue.pop_batch(free) if free > 0 \
+            else []
+        if items:
+            self._admit_requests(items)
+        self._generate_step()
+        with self._done_lock:
+            return len(self.completed)
+
     def start(self) -> None:
         self.pipeline.start()
 

@@ -28,7 +28,11 @@ Two execution disciplines share that substrate:
 Slot lifecycle::
 
     free --acquire--> active --step*--> finished --harvest--> free
-                       (epoch bumped on release; stale SlotRefs raise)
+                      |    ^   (epoch bumped on release; stale SlotRefs
+                 preempt   |    raise — including across preempt/resume)
+                      v    resume (any free slot, fresh pages, remapped
+                    parked         block table)
+                 (KV pages in the host pool, scalars in _Parked)
 """
 from __future__ import annotations
 
@@ -272,6 +276,44 @@ class _ChunkJob:
     offset: int = 0           # next unwritten position
 
 
+class _ParkHandle:
+    """Opaque resume handle for unhashable request keys.
+
+    The parked dict and the host page pool index by the handle; plain
+    object identity hashing keeps mutable keys (e.g. ``Request``
+    dataclasses) usable without touching their equality semantics.
+    """
+    __slots__ = ("key",)
+
+    def __init__(self, key: Any):
+        self.key = key
+
+
+def _park_handle(key: Any) -> Any:
+    try:
+        hash(key)
+    except TypeError:
+        return _ParkHandle(key)
+    return key
+
+
+@dataclass
+class _Parked:
+    """Host-side state of a preempted (swapped-out) request.
+
+    Everything a resume needs that does not live in the host page pool:
+    the decode scalars and the emitted-token history.  The KV pages
+    themselves sit in :class:`~repro.serving.kvpool.HostPagePool` under
+    the request key.
+    """
+    key: Any
+    tokens: List[int]         # emitted so far (harvest continuity)
+    pos: int                  # SlotState.pos at preemption
+    remaining: int            # decode budget left
+    cur: int                  # pending token awaiting its KV write
+    dec_pos: int              # _pos value: the next decode position
+
+
 class ContinuousGenerator(_GeneratorBase):
     """Decode-step batching: requests join/leave a persistent slot table.
 
@@ -294,6 +336,17 @@ class ContinuousGenerator(_GeneratorBase):
       per ``step`` interleaved with live decode (chunked prefill), so
       long contexts no longer stall the batch.
 
+    Paged mode additionally supports **page-granular preemption**
+    (swap-to-host): ``preempt(ref)`` parks a live slot by DMA-ing its
+    pages into the :class:`~repro.serving.kvpool.HostPagePool` and
+    releasing the lease (epoch bump — stale SlotRefs raise), freeing
+    both the slot and its device pages for joiners; ``resume(key)``
+    re-admits the parked request into any free slot on fresh physical
+    pages with the block table remapped.  Preempt→resume cycles are
+    token-identical to uninterrupted generation (``tests/test_swap.py``)
+    because whole-page host round-trips are bitwise exact and the
+    gather backend reads through the table, never page identity.
+
     Both layouts are token-identical to the whole-batch ``Generator``
     (see ``tests/test_continuous.py`` / ``tests/test_paged.py``).
     """
@@ -303,7 +356,8 @@ class ContinuousGenerator(_GeneratorBase):
                  policy: Optional[PrefetchPolicy] = None,
                  paged: bool = False, page_size: int = 8,
                  page_budget: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 host_page_budget: Optional[int] = None):
         super().__init__(cfg, params, gen_cfg, streamed=streamed,
                          policy=policy)
         self.num_slots = num_slots
@@ -316,10 +370,14 @@ class ContinuousGenerator(_GeneratorBase):
             raise ValueError("prefill_chunk requires paged=True")
         self.prefill_chunk = prefill_chunk
         self._prefilling: Dict[int, _ChunkJob] = {}
+        self._parked: Dict[Any, _Parked] = {}
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.peak_in_flight = 0
         if paged:
             self.kv: Optional[PagedKVCache] = PagedKVCache(
                 cfg, num_slots, total, page_size, num_pages=page_budget,
-                dtype=gen_cfg.dtype)
+                dtype=gen_cfg.dtype, host_pages=host_page_budget)
             if streamed:
                 self.caches = self.kv.init_layered(self.exec.layer_kinds())
             else:
@@ -425,6 +483,7 @@ class ContinuousGenerator(_GeneratorBase):
         if self.paged and not self.kv.admit(ref.index, g.ctx_len + budget):
             self.table.release(ref)         # page backpressure
             return None
+        self.peak_in_flight = max(self.peak_in_flight, self.in_flight)
         if self.prefill_chunk is not None:
             # park decode writes on the last position: its page is either
             # unallocated (-> trash) or self-overwritten by the final
@@ -566,6 +625,92 @@ class ContinuousGenerator(_GeneratorBase):
         self.steps += 1
         return len(refs) + progressed
 
+    # ---------------------------------------------- preemption (swap-to-host)
+    @property
+    def parked_slots(self) -> int:
+        return len(self._parked)
+
+    def parked_keys(self) -> List[Any]:
+        """Resume handles in preemption order (FIFO resume is fair)."""
+        return list(self._parked)
+
+    @property
+    def in_flight(self) -> int:
+        """Requests admitted and unfinished: live slots + parked."""
+        return self.table.active_slots + len(self._parked)
+
+    def swap_victim(self) -> Optional[SlotRef]:
+        """Preemption policy: the live slot with the most remaining
+        budget — the last to finish, i.e. the lowest-priority work —
+        excluding slots still chunk-prefilling.  Ties break to the
+        lowest slot index (deterministic)."""
+        best, best_rem = None, -1
+        for ref in self.table.active_refs():
+            if ref.index in self._prefilling:
+                continue
+            rem = self.table.state(ref).remaining
+            if rem > best_rem:
+                best, best_rem = ref, rem
+        return best
+
+    def preempt(self, ref: SlotRef) -> Optional[Any]:
+        """Park a live slot: swap its KV pages to the host pool and end
+        its lease.  Returns the resume handle (the request key), or
+        ``None`` when the host pool cannot hold the slot's pages (or the
+        slot is still chunk-prefilling) — the slot stays live.
+
+        The release bumps the slot's epoch, so any SlotRef retained
+        from before the preemption raises :class:`StaleSlotError`
+        instead of touching whatever lease occupies the slot next —
+        including this request's own post-``resume`` lease.
+        """
+        assert self.paged, "preempt requires paged=True"
+        st = self.table.state(ref)              # validates the lease
+        if ref.index in self._prefilling:
+            return None
+        handle = _park_handle(st.key)
+        pools = self.caches if self.streamed else self.cache
+        if not self.kv.swap_out(pools, ref.index, handle):
+            return None                          # host pool exhausted
+        st = self.table.release(ref)
+        self._parked[handle] = _Parked(
+            key=st.key, tokens=list(st.tokens), pos=st.pos,
+            remaining=st.remaining, cur=int(self._cur[ref.index]),
+            dec_pos=int(self._pos[ref.index]))
+        # the freed row keeps riding the batched decode like any dead
+        # slot; its block-table row now points at the trash page, so the
+        # parked writes can never land in a page re-issued to a joiner
+        self._cur[ref.index] = 0
+        self.swap_outs += 1
+        return handle
+
+    def resume(self, key: Any) -> Optional[SlotRef]:
+        """Un-park a preempted request into any free slot: fresh lease
+        (new epoch), fresh physical pages, block-table row remapped.
+        ``None`` when slots or device pages are still exhausted — the
+        request stays parked host-side."""
+        assert self.paged, "resume requires paged=True"
+        parked = self._parked[key]
+        ref = self.table.acquire(parked.key, pos=parked.pos,
+                                 remaining=parked.remaining)
+        if ref is None:
+            return None
+        pools = self.caches if self.streamed else self.cache
+        new_pools = self.kv.swap_in(pools, ref.index, key)
+        if new_pools is None:
+            self.table.release(ref)              # pages still exhausted
+            return None
+        if self.streamed:
+            self.caches = new_pools
+        else:
+            self.cache = new_pools
+        self.table.state(ref).tokens.extend(parked.tokens)
+        self._cur[ref.index] = parked.cur
+        self._pos[ref.index] = parked.dec_pos
+        del self._parked[key]
+        self.swap_ins += 1
+        return ref
+
     # -------------------------------------------------- dynamic capacity
     def resize(self, num_slots: int) -> int:
         """Grow/shrink the slot table; returns the actual capacity.
@@ -603,14 +748,23 @@ class ContinuousGenerator(_GeneratorBase):
             self.cache = pools
         return actual
 
+    def set_host_page_budget(self, pages: int) -> int:
+        """Retarget the host swap pool's page budget (paged only)."""
+        assert self.paged, "set_host_page_budget requires paged=True"
+        return self.kv.set_host_budget(pages)
+
     def retarget(self, num_slots: Optional[int] = None,
-                 page_budget: Optional[int] = None) -> Dict[str, int]:
+                 page_budget: Optional[int] = None,
+                 host_page_budget: Optional[int] = None) -> Dict[str, int]:
         """Policy-boundary hook: apply the live placement's capacity.
 
         The page budget is clamped to what the block tables can address
         (``num_slots * nmax`` — anything beyond is device memory no slot
         could ever reference) and floored at one worst-case request
-        (``nmax`` pages) so the pool can never starve admission.
+        (``nmax`` pages) so the pool can never starve admission.  The
+        host budget (the placement's ``c_cpu`` KV share) is capped at
+        parking every slot worst-case (``num_slots * nmax``); a zero
+        budget legitimately disables preemption.
         """
         out: Dict[str, int] = {}
         if num_slots is not None:
@@ -619,6 +773,9 @@ class ContinuousGenerator(_GeneratorBase):
             budget = max(min(page_budget, self.num_slots * self.kv.nmax),
                          self.kv.nmax)
             out["pages"] = self.set_page_budget(budget)
+        if host_page_budget is not None and self.paged:
+            budget = min(host_page_budget, self.num_slots * self.kv.nmax)
+            out["host_pages"] = self.set_host_page_budget(budget)
         return out
 
     def harvest(self) -> List[Tuple[Any, str, List[int]]]:

@@ -33,19 +33,38 @@ vLLM-style paging:
     (``ops.paged_decode_attention``), so per-row compute stays
     bit-identical to the dense layout on the gather backend.
 
+``HostPagePool``
+    The host tier of the paper's KV placement (the ``c_cpu`` fraction of
+    Eq. 3): preallocated host-side page arrays mirroring the device
+    pool's leaves, plus a free-list of host page ids.  ``PagedKVCache``
+    swaps a preempted slot's pages here in whole-page units
+    (``swap_out`` = D2H DMA + device free, ``swap_in`` = H2D DMA onto
+    *fresh* device pages + block-table remap).  On swap-in the slot
+    generally lands on different physical pages than it left — logical
+    order is preserved by the remapped block table, never by page
+    identity, so the trash-page isolation invariant survives arbitrary
+    preempt/resume/resize interleavings (``tests/test_swap.py`` /
+    ``tests/test_swap_pool.py``).  On a real accelerator these arrays
+    would live in pinned host memory (``jax.device_put`` onto a
+    ``pinned_host`` memory kind) so the DMA can run async; on the CPU
+    backend numpy arrays *are* the host tier.
+
 **Page-budget ↔ placement coupling:** the engine's policy boundary
 retargets ``PagePool.resize`` from the live placement via
 ``PlacementOptimizer.kv_page_budget`` — the KV bytes the placement puts
-on the accelerator, divided by ``CostModel.kv_page_bytes``.  Because a
-request only reserves ``ceil((ctx + its_budget) / page_size)`` pages,
-the same GPU KV byte budget admits a strictly larger concurrent batch
-than dense worst-case rows whenever budgets/contexts are heterogeneous,
-and the freed bytes flow back into the placement's host partition cache
-trade-off at page granularity.
+on the accelerator, divided by ``CostModel.kv_page_bytes`` — and
+``HostPagePool.resize`` via ``PlacementOptimizer.kv_host_page_budget``
+(the ``c_cpu`` term), so both tiers of the KV placement track the live
+solve.  Because a request only reserves
+``ceil((ctx + its_budget) / page_size)`` pages, the same GPU KV byte
+budget admits a strictly larger concurrent batch than dense worst-case
+rows whenever budgets/contexts are heterogeneous; with swap-to-host the
+pool can additionally *reclaim* pages from live slots, so admission is
+bounded by device + host pages rather than device pages alone.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -108,6 +127,10 @@ class PagePool:
     def table(self, key: Any) -> List[int]:
         return list(self._tables[key])
 
+    def reservation(self, key: Any) -> int:
+        """Unspent worst-case reservation still booked for ``key``."""
+        return self._reserved.get(key, 0)
+
     def holders(self) -> List[Any]:
         return list(self._tables)
 
@@ -162,6 +185,43 @@ class PagePool:
         self._free.extend(reversed(tab))  # low ids pop first again
         return len(tab)
 
+    # --------------------------------------------------------------- swap
+    def swap_out(self, key: Any) -> Tuple[List[int], int]:
+        """End ``key``'s device residency for a host swap.
+
+        Returns ``(pages, reservation)``: the page ids in logical order
+        (so the caller can DMA them out before they are re-issued) and
+        the unspent worst-case reservation the slot must re-book on
+        swap-in.  The freed pages are re-issuable *immediately* — the
+        swapped-out data's integrity lives host-side from here on.
+        """
+        tab = self._tables.pop(key)       # KeyError = not a holder
+        res = self._reserved.pop(key, 0)
+        self._free.extend(reversed(tab))
+        return list(tab), res
+
+    def swap_in(self, key: Any, blocks: int,
+                reserve: int = 0) -> Optional[List[int]]:
+        """Re-lease ``blocks`` pages (+ re-book ``reserve``) for a
+        swapped-in slot.
+
+        The physical ids generally differ from the ones ``swap_out``
+        returned — correctness must come from the caller's remapped
+        block table, never from page identity.  Returns ``None`` when
+        the pool cannot cover ``blocks + reserve`` right now (the slot
+        stays parked host-side).
+        """
+        if key in self._tables:
+            raise ValueError(f"slot {key!r} already holds pages")
+        if blocks < 0 or reserve < 0:
+            raise ValueError("blocks/reserve must be >= 0")
+        if blocks + reserve > self.available_pages:
+            return None
+        new = [self._free.pop() for _ in range(blocks)]
+        self._tables[key] = new
+        self._reserved[key] = reserve
+        return new
+
     # ------------------------------------------------------------- resize
     def resize(self, target: int) -> int:
         """Retarget the usable-page capacity; returns the actual size.
@@ -188,6 +248,205 @@ class PagePool:
         self._free = sorted(free_set, reverse=True)
         self._capacity = new_cap
         return self._capacity
+
+
+# ---------------------------------------------------------------------------
+# host page pool (swap-to-host tier)
+# ---------------------------------------------------------------------------
+
+def _pool_leaves(pools):
+    """Yield ``(leaf, page_axis)`` for every pooled-cache array.
+
+    Handles both cache layouts — the stacked ``Model`` dict (page axis 1
+    under ``"blocks"``, 0 under ``"prefix"``) and the streamed per-layer
+    list (page axis 0) — in a stable order shared with the host mirror,
+    the same dispatch as :func:`resize_cache_rows`.
+    """
+    if isinstance(pools, dict):
+        for leaf in jax.tree.leaves(pools["blocks"]):
+            yield leaf, 1
+        for leaf in jax.tree.leaves(pools.get("prefix", [])):
+            yield leaf, 0
+    else:
+        for c in pools:
+            for leaf in jax.tree.leaves(c):
+                yield leaf, 0
+
+
+def _rebuild_pools(pools, new_leaves: List[Any]):
+    """Reassemble a pools pytree from leaves in ``_pool_leaves`` order."""
+    it = iter(new_leaves)
+    if isinstance(pools, dict):
+        bl, bdef = jax.tree.flatten(pools["blocks"])
+        out = dict(pools)
+        out["blocks"] = jax.tree.unflatten(bdef, [next(it) for _ in bl])
+        if "prefix" in pools:
+            pl, pdef = jax.tree.flatten(pools["prefix"])
+            out["prefix"] = jax.tree.unflatten(pdef, [next(it) for _ in pl])
+        return out
+    rebuilt = []
+    for c in pools:
+        cl, cdef = jax.tree.flatten(c)
+        rebuilt.append(jax.tree.unflatten(cdef, [next(it) for _ in cl]))
+    return rebuilt
+
+
+class HostPagePool:
+    """Host-side KV page store for swapped-out slots (Eq. 3's ``c_cpu``).
+
+    Bookkeeping mirrors :class:`PagePool` — a free-list of fixed-size
+    pages — with 0-based ids and no trash page (host pages are never
+    decoded against, only DMA'd).  Each holder additionally remembers
+    the device-side worst-case reservation it must re-book on swap-in,
+    so a resumed slot keeps its no-mid-decode-exhaustion guarantee.
+
+    The page *data* lives in preallocated host arrays mirroring the
+    device pool's leaves with the page axis sized to this capacity
+    (built lazily on the first ``store``).  ``capacity`` may be 0 — a
+    placement with no ``c_cpu`` KV share simply cannot swap.
+    """
+
+    def __init__(self, capacity: int, page_size: int):
+        if capacity < 0:
+            raise ValueError("capacity must be >= 0")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.page_size = page_size
+        self._capacity = capacity
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self._held: Dict[Any, List[int]] = {}
+        self._reserve: Dict[Any, int] = {}
+        self._mirror: Optional[List[Any]] = None   # [(np array, axis)]
+
+    # ------------------------------------------------------------ queries
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return sum(len(p) for p in self._held.values())
+
+    def holders(self) -> List[Any]:
+        return list(self._held)
+
+    def pages(self, key: Any) -> List[int]:
+        return list(self._held[key])
+
+    def reservation(self, key: Any) -> int:
+        return self._reserve[key]
+
+    def can_hold(self, blocks: int) -> bool:
+        return blocks <= len(self._free)
+
+    # ---------------------------------------------------------- lifecycle
+    def acquire(self, key: Any, blocks: int,
+                reserve: int = 0) -> Optional[List[int]]:
+        """Lease ``blocks`` host pages for a swapped-out slot, recording
+        the device reservation to restore on swap-in.  ``None`` when the
+        host pool cannot hold the slot."""
+        if key in self._held:
+            raise ValueError(f"handle {key!r} already holds host pages")
+        if blocks < 0 or reserve < 0:
+            raise ValueError("blocks/reserve must be >= 0")
+        if blocks > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(blocks)]
+        self._held[key] = got
+        self._reserve[key] = reserve
+        return got
+
+    def release(self, key: Any) -> List[int]:
+        """Return ``key``'s host pages to the free list (swap-in done,
+        or the parked request was cancelled)."""
+        got = self._held.pop(key)          # KeyError = double free
+        self._reserve.pop(key, None)
+        self._free.extend(reversed(got))
+        return got
+
+    # ------------------------------------------------------------- resize
+    def resize(self, target: int) -> int:
+        """Retarget host capacity; returns the actual size.
+
+        Growth appends fresh ids (and pads the data arrays when built);
+        shrink drops only *free* pages from the top, clamped to one past
+        the highest held page so no parked slot's KV is ever dropped.
+        """
+        target = max(int(target), 0)
+        if target > self._capacity:
+            self._free = sorted(
+                self._free + list(range(self._capacity, target)),
+                reverse=True)
+            self._capacity = target
+        else:
+            floor = max(target,
+                        max((p for ps in self._held.values() for p in ps),
+                            default=-1) + 1)
+            self._free = sorted((p for p in self._free if p < floor),
+                                reverse=True)
+            self._capacity = floor
+        self._fit_mirror()
+        return self._capacity
+
+    # --------------------------------------------------------- page data
+    def _fit_mirror(self) -> None:
+        if self._mirror is None:
+            return
+        fitted = []
+        for arr, axis in self._mirror:
+            if self._capacity > arr.shape[axis]:
+                pad = [(0, 0)] * arr.ndim
+                pad[axis] = (0, self._capacity - arr.shape[axis])
+                arr = np.pad(arr, pad)
+            elif self._capacity < arr.shape[axis]:
+                sl = [slice(None)] * arr.ndim
+                sl[axis] = slice(0, self._capacity)
+                arr = np.ascontiguousarray(arr[tuple(sl)])
+            fitted.append((arr, axis))
+        self._mirror = fitted
+
+    def _ensure_mirror(self, pools) -> None:
+        if self._mirror is not None:
+            return
+        mirror = []
+        for leaf, axis in _pool_leaves(pools):
+            shape = list(leaf.shape)
+            shape[axis] = self._capacity
+            mirror.append((np.zeros(shape, leaf.dtype), axis))
+        self._mirror = mirror
+
+    def store(self, pools, key: Any, dev_pages: Sequence[int]) -> None:
+        """D2H DMA: copy ``dev_pages`` (logical order) of every pool
+        leaf into ``key``'s host pages."""
+        self._ensure_mirror(pools)
+        hp = np.asarray(self._held[key], np.int64)
+        dp = np.asarray(list(dev_pages), np.int64)
+        for (host, axis), (dev, _) in zip(self._mirror,
+                                          _pool_leaves(pools)):
+            if axis == 1:
+                host[:, hp] = np.asarray(dev[:, dp])
+            else:
+                host[hp] = np.asarray(dev[dp])
+
+    def load(self, pools, key: Any, dev_pages: Sequence[int]):
+        """H2D DMA: copy ``key``'s host pages into ``dev_pages``
+        (logical order); returns the updated pools pytree."""
+        self._ensure_mirror(pools)
+        hp = np.asarray(self._held[key], np.int64)
+        dp = jnp.asarray(np.asarray(list(dev_pages), np.int32))
+        new_leaves = []
+        for (host, axis), (dev, _) in zip(self._mirror,
+                                          _pool_leaves(pools)):
+            rows = jnp.asarray(host[:, hp] if axis == 1 else host[hp])
+            if axis == 1:
+                new_leaves.append(dev.at[:, dp].set(rows.astype(dev.dtype)))
+            else:
+                new_leaves.append(dev.at[dp].set(rows.astype(dev.dtype)))
+        return _rebuild_pools(pools, new_leaves)
 
 
 # ---------------------------------------------------------------------------
@@ -237,7 +496,7 @@ class PagedKVCache:
 
     def __init__(self, cfg: ModelConfig, num_slots: int, total_len: int,
                  page_size: int, num_pages: Optional[int] = None,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, host_pages: Optional[int] = None):
         _attn_only_kinds(cfg)
         self.cfg = cfg
         self.num_slots = num_slots
@@ -247,6 +506,9 @@ class PagedKVCache:
         worst = num_slots * self.nmax
         self.pool = PagePool(worst if num_pages is None else num_pages,
                              page_size)
+        # host swap tier: default sizes it to park every slot worst-case
+        self.host = HostPagePool(worst if host_pages is None else host_pages,
+                                 page_size)
         self.dtype = dtype
         self._tab = np.zeros((num_slots, self.nmax), np.int32)  # TRASH_PAGE
         self._tab_dev: Optional[jnp.ndarray] = None
@@ -305,6 +567,51 @@ class PagedKVCache:
 
     def admit_capacity(self, length: int) -> int:
         return self.pool.admit_capacity(length)
+
+    # ------------------------------------------------------ swap-to-host
+    def can_swap_out(self, slot: int) -> bool:
+        """The host pool can hold ``slot``'s pages right now."""
+        return self.host.can_hold(len(self.pool.table(slot)))
+
+    def swap_out(self, pools, slot: int, handle: Any) -> bool:
+        """Preempt ``slot``: DMA its pages D2H under ``handle``, free its
+        device pages + reservation, point its block-table row at the
+        trash page (parked decode writes can never corrupt re-issued
+        pages).  ``False`` when the host pool lacks room — the slot
+        stays live and untouched.
+        """
+        dev = self.pool.table(slot)
+        hp = self.host.acquire(handle, len(dev),
+                               reserve=self.pool.reservation(slot))
+        if hp is None:
+            return False
+        self.host.store(pools, handle, dev)      # D2H before pages recycle
+        self.pool.swap_out(slot)
+        self._tab[slot, :] = TRASH_PAGE
+        self._tab_dev = None
+        return True
+
+    def swap_in(self, pools, slot: int, handle: Any):
+        """Resume ``handle`` into ``slot``: fresh physical pages (ids
+        generally differ from the swapped-out ones), H2D DMA in logical
+        order, block-table row remapped.  Returns the updated pools, or
+        ``None`` when the device pool cannot cover the slot's pages plus
+        its re-booked reservation (the request stays parked host-side).
+        """
+        blocks = len(self.host.pages(handle))
+        new = self.pool.swap_in(slot, blocks, self.host.reservation(handle))
+        if new is None:
+            return None
+        pools = self.host.load(pools, handle, new)
+        self.host.release(handle)
+        self._tab[slot, :] = TRASH_PAGE
+        self._tab[slot, :blocks] = new
+        self._tab_dev = None
+        return pools
+
+    def set_host_budget(self, pages: int) -> int:
+        """Retarget the host pool (the placement's ``c_cpu`` KV share)."""
+        return self.host.resize(pages)
 
     # ------------------------------------------------------------ scatter
     def scatter_row_stacked(self, cache, row_cache, slot: int,

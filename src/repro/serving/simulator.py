@@ -83,6 +83,12 @@ class SimConfig:
     # over-committing KV memory
     paged: bool = False
     page_size: int = 16
+    # swap-to-host preemption (paged only): a page-starved join may park
+    # the longest-remaining live slot host-side (budget = the placement's
+    # c_cpu KV share in pages) at a whole-page PCIe latency cost, instead
+    # of waiting for a natural leave; parked slots resume FIFO once the
+    # join backlog clears
+    swap: bool = False
 
 
 @dataclass
@@ -246,7 +252,16 @@ class ServingSimulator:
         paged KV pool: a joiner reserves its worst-case page count from
         the placement's page budget and stays queued when the pool is
         exhausted (join backpressure) — the budget itself is retargeted
-        from the live placement at every policy consult."""
+        from the live placement at every policy consult.
+
+        With ``swap=True`` on top, a page-starved join preempts the
+        longest-remaining live slot instead: its pages move to the host
+        pool (budget = the placement's ``c_cpu`` KV share via
+        ``kv_host_page_budget``) and the join takes the freed device
+        pages, each direction costing ``CostModel.kv_swap_time`` of
+        PCIe transfer on that step.  Parked slots resume FIFO once the
+        join backlog clears — the fig8/fig9 swap-vs-backpressure
+        trade-off rows come from this model."""
         s = self.sim
         n = len(reqs)
         ret_q: List[Request] = []
@@ -261,14 +276,20 @@ class ServingSimulator:
             seq += 1
         ret_busy = gen_running = False
         active: List[List] = []          # [request, tokens_remaining]
+        swapped: List[List] = []         # parked host-side, FIFO resume
         req_pages = -(-(s.in_len + s.out_len) // s.page_size)
 
         def page_budget(p: Placement) -> int:
             # floor of one request so a tiny placement can still progress
             return max(self.opt.kv_page_budget(p, s.page_size), req_pages)
 
+        def host_budget(p: Placement) -> int:
+            return (self.opt.kv_host_page_budget(p, s.page_size)
+                    if s.swap else 0)
+
         cap = {"b": 1, "p": self._placement(1), "steps": 0,
-               "pages": page_budget(self._placement(1)), "reserved": 0}
+               "pages": page_budget(self._placement(1)), "reserved": 0,
+               "host": host_budget(self._placement(1))}
         now = 0.0
 
         def start_ret(t):
@@ -294,17 +315,33 @@ class ServingSimulator:
         def gen_step(t):
             nonlocal seq, gen_running, gpu_busy
             # admit arrivals into free slots (join at this step boundary);
-            # paged mode also reserves KV pages — exhaustion defers joins
-            joiners = []
+            # paged mode also reserves KV pages — exhaustion preempts the
+            # longest-remaining slot (swap) or defers the join
+            joiners, swaps = [], 0
             while ctx_q and len(active) < cap["b"]:
                 if s.paged and cap["reserved"] + req_pages > cap["pages"]:
-                    break                     # page exhaustion: backpressure
+                    if (s.swap and active
+                            and (len(swapped) + 1) * req_pages
+                            <= cap["host"]):
+                        victim = max(active, key=lambda sl: sl[1])
+                        active.remove(victim)     # pages move host-side
+                        swapped.append(victim)
+                        cap["reserved"] -= req_pages
+                        swaps += 1
+                        continue
+                    break                 # page exhaustion: backpressure
                 r = ctx_q.pop(0)
                 r.t_gen_start = t
                 joiners.append(r)
                 active.append([r, s.out_len])
                 if s.paged:
                     cap["reserved"] += req_pages
+            # parked slots swap back in FIFO once the join backlog clears
+            while (swapped and not ctx_q and len(active) < cap["b"]
+                   and cap["reserved"] + req_pages <= cap["pages"]):
+                active.append(swapped.pop(0))
+                cap["reserved"] += req_pages
+                swaps += 1
             if not active:
                 gen_running = False
                 return
@@ -316,11 +353,14 @@ class ServingSimulator:
                 p = cap["p"]
                 if s.paged:
                     cap["pages"] = page_budget(p)
+                    cap["host"] = host_budget(p)
                 trace.append({"t": t, "batch": len(active),
                               "P": p.resident_partitions, "c_gpu": p.c_gpu,
                               "w_gpu": p.w_gpu, "backlog": len(ctx_q),
                               "pages_free": (cap["pages"] - cap["reserved"]
                                              if s.paged else None),
+                              "swapped": len(swapped) if s.paged else None,
+                              "in_flight": len(active) + len(swapped),
                               "nprobe": self._nprobe(p)
                               or self.cost.num_partitions})
             cap["steps"] += 1
@@ -333,6 +373,9 @@ class ServingSimulator:
                 dur += self.cost.prefill_time(
                     len(joiners), s.in_len, p.w_gpu, p.c_gpu,
                     s.depth_prefill, w_cpu=w_cpu)
+            if swaps:       # whole-page DMA over PCIe rides it too
+                dur += swaps * self.cost.kv_swap_time(req_pages,
+                                                      s.page_size)
             gpu_busy += dur
             for slot in active:          # one token per live slot
                 slot[1] -= 1

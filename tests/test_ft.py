@@ -61,6 +61,82 @@ def test_oom_recovery_ladder_demotes_then_succeeds():
     assert (final.c_gpu <= start.c_gpu and final.w_gpu <= start.w_gpu)
 
 
+def test_degraded_placement_triggers_swap_not_starvation():
+    """The ladder's c_gpu -> c_cpu shift must *do* something: after a
+    demotion is applied to a live paged generator, a page-starved join
+    preempts the lowest-priority slot (swap-out to the grown host pool)
+    instead of starving — and every request still completes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.model import Model
+    from repro.serving.generator import (ContinuousGenerator, Generator,
+                                         GeneratorConfig)
+
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    params = Model(cfg, remat=False).init(jax.random.PRNGKey(0),
+                                          jnp.float32)
+    ctx, new, page = 16, 4, 4
+    worst = -(-(ctx + new) // page)                  # 5 pages/request
+    g = GeneratorConfig(ctx_len=ctx, max_new_tokens=new)
+    gen = ContinuousGenerator(cfg, params, g, num_slots=3, streamed=False,
+                              paged=True, page_size=page,
+                              page_budget=2 * worst,  # fits two requests
+                              host_page_budget=0)     # no swap tier yet
+    # a cost model whose page budgets land on the same tiny scale
+    mp = ModelProfile.from_config(cfg)
+    cm = CostModel(PF_HIGH, mp, partition_bytes=8 * GB, num_partitions=8)
+    opt = PlacementOptimizer(cm, avg_ctx_len=ctx, avg_out_len=new,
+                             kv_page_size=page)
+    rec = OOMRecovery(opt)
+
+    assert gen.join("a", "alpha one") is not None
+    assert gen.join("b", "beta two") is not None
+    assert gen.join("c", "gamma three") is None      # page backpressure
+    victim = gen.swap_victim()
+    assert victim is not None
+    assert gen.preempt(victim) is None               # host pool: 0 pages
+
+    # OOM on the generation path demotes c_gpu -> c_cpu and (because the
+    # generator rides along) resizes both page pools from the new split
+    p0 = Placement(w_gpu=0.25, w_cpu=0.75, c_gpu=2 / 3, c_cpu=0.1,
+                   resident_partitions=0, gen_batch=3)
+    calls = {"n": 0}
+
+    def flaky_gen(p):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("RESOURCE_EXHAUSTED: out of memory")
+        return "ok"
+
+    out, p1 = rec.run(flaky_gen, p0, generator=gen)
+    assert out == "ok"
+    assert p1.c_cpu > p0.c_cpu                       # KV demoted to host
+    assert gen.kv.host.capacity >= worst             # swap tier funded
+
+    # the previously starving join now rides a preemption
+    handle = gen.preempt(gen.swap_victim())
+    assert handle is not None                        # swap-out, not starve
+    assert gen.join("c", "gamma three") is not None
+    assert gen.swap_outs == 1
+
+    results = {}
+    guard = 0
+    while gen.active_slots or gen.parked_slots:
+        for key in gen.parked_keys():
+            gen.resume(key)          # no-op (None) until pages free up
+        gen.step()
+        for key, text, _ in gen.harvest():
+            results[key] = text
+        guard += 1
+        assert guard < 100, "swap path starved"
+    assert set(results) == {"a", "b", "c"}
+    # token-identity survives the degradation cycle
+    dense = Generator(cfg, params, g, streamed=False).generate(
+        ["alpha one", "beta two", "gamma three"])
+    assert [results["a"], results["b"], results["c"]] == dense
+
+
 def test_retry_with_backoff():
     calls = {"n": 0}
 

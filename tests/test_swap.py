@@ -1,0 +1,314 @@
+"""KV swap-to-host: page-granular preemption equivalence + regressions.
+
+Headline contract (extends the PR 2/PR 3 token-identity chain): a paged
+``ContinuousGenerator`` driving a randomized join/leave schedule **with
+forced preempt→resume cycles** produces token-identical outputs to the
+uninterrupted dense whole-batch ``Generator``, on both the scan-based
+``Model`` path and the offloading ``StreamedExecutor`` path.  Swap round
+trips are whole-page host copies (bitwise exact for f32) and the gather
+backend reads through the remapped block table, so the equality is exact
+— even though a resumed slot generally lands on a different slot index
+AND different physical pages than it was preempted from.
+
+The hypothesis property suite for the pool bookkeeping lives in
+``tests/test_swap_pool.py``; this module is deliberately hypothesis-free
+so it always runs in the CI fast tier.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.serving.generator import (ContinuousGenerator, Generator,
+                                     GeneratorConfig, StaleSlotError)
+from repro.serving.kvpool import TRASH_PAGE
+
+CTX, MAX_NEW = 16, 5
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    params = Model(cfg, remat=False).init(jax.random.PRNGKey(0),
+                                          jnp.float32)
+    return cfg, params
+
+
+def _prompts(n=6):
+    return [f"query {i} topic{i % 3} alpha beta" for i in range(n)]
+
+
+def _random_schedule(seed, ticks=40, max_joins=3):
+    rng = np.random.default_rng(seed)
+    return [int(rng.integers(0, max_joins)) for _ in range(ticks)]
+
+
+def _run_with_preemption(cont, prompts, seed, preempt_every=3,
+                         park_ticks=2, schedule=None):
+    """run()-style driver that forcibly preempts a victim every few
+    ticks and resumes it a couple of ticks later.  Returns (results,
+    number of completed preempt→resume cycles)."""
+    pending = list(enumerate(prompts))[::-1]
+    results = [None] * len(prompts)
+    parked = []                      # (due_tick, handle)
+    tick = cycles = 0
+    while pending or cont.active_slots or cont.parked_slots:
+        for due, handle in list(parked):
+            if tick >= due and cont.resume(handle) is not None:
+                parked.remove((due, handle))
+                cycles += 1
+        allow = len(pending)
+        if schedule is not None and tick < len(schedule):
+            allow = min(allow, schedule[tick])
+        joined = 0
+        while pending and joined < allow and cont.admit_capacity > 0:
+            key, prompt = pending.pop()
+            assert cont.join(key, prompt) is not None
+            joined += 1
+        if tick % preempt_every == preempt_every - 1:
+            victim = cont.swap_victim()
+            if victim is not None:
+                handle = cont.preempt(victim)
+                if handle is not None:
+                    parked.append((tick + park_ticks, handle))
+        cont.step()
+        for key, text, _ in cont.harvest():
+            results[key] = text
+        tick += 1
+        assert tick < 500, "preemption driver stalled"
+    assert all(r is not None for r in results)
+    return results, cycles
+
+
+# ---------------------------------------------------------------- equivalence
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_preempt_resume_token_identical(tiny_model, seed):
+    """Forced preempt→resume cycles on randomized join schedules never
+    change greedy outputs vs the uninterrupted whole-batch reference."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _prompts()
+    dense = Generator(cfg, params, g, streamed=False).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=3, streamed=False,
+                               paged=True, page_size=4)
+    out, cycles = _run_with_preemption(cont, prompts, seed,
+                                       schedule=_random_schedule(seed))
+    assert out == dense
+    assert cycles > 0, "no preemption cycle actually happened"
+    assert cont.swap_outs == cont.swap_ins and cont.swap_outs >= cycles
+    # every lease and every page (device AND host) returned
+    assert cont.free_slots == cont.num_slots
+    assert cont.kv.pool.used_pages == 0
+    assert cont.kv.pool.reserved_pages == 0
+    assert cont.kv.host.used_pages == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_preempt_resume_token_identical_streamed(tiny_model, seed):
+    """Same contract through the offloading StreamedExecutor path (its
+    slot mask must tolerate parked rows riding the batched decode)."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _prompts()
+    dense = Generator(cfg, params, g, streamed=True).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=3, streamed=True,
+                               paged=True, page_size=4)
+    out, cycles = _run_with_preemption(cont, prompts, seed,
+                                       schedule=_random_schedule(seed))
+    assert out == dense
+    assert cycles > 0
+
+
+def test_preempt_with_chunked_prefill_interleaved(tiny_model):
+    """Preemption composes with chunked prefill: mid-chunk joiners are
+    never preemptible, finished slots are, outputs stay identical."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _prompts()
+    dense = Generator(cfg, params, g, streamed=False).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=3, streamed=False,
+                               paged=True, page_size=4, prefill_chunk=7)
+    out, cycles = _run_with_preemption(cont, prompts, seed=11,
+                                       schedule=_random_schedule(11))
+    assert out == dense
+    assert cycles > 0
+
+
+# ------------------------------------------------------------- epoch guard
+
+def test_preempted_ref_is_stale_and_resume_mints_fresh_lease(tiny_model):
+    """The pre-preemption SlotRef must never validate again — not while
+    parked, and not against the post-resume lease (epoch guard)."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                               paged=True, page_size=4)
+    old = cont.join("x", "alpha beta")
+    handle = cont.preempt(old)
+    assert handle is not None
+    with pytest.raises(StaleSlotError):
+        cont.table.advance(old, token=0)
+    fresh = cont.resume(handle)
+    assert fresh is not None
+    assert fresh.epoch != old.epoch or fresh.index != old.index
+    with pytest.raises(StaleSlotError):          # stale across the resume
+        cont.table.advance(old, token=0)
+    # the fresh lease decodes to completion with full token history
+    while cont.active_slots:
+        cont.step()
+    ((key, text, tokens),) = cont.harvest()
+    assert key == "x" and len(tokens) == MAX_NEW
+
+
+def test_preempt_rejects_prefilling_and_host_exhaustion(tiny_model):
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    # host_page_budget=0: a placement with no c_cpu share cannot swap
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                               paged=True, page_size=4,
+                               host_page_budget=0)
+    ref = cont.join("a", "alpha")
+    assert cont.swap_victim() is not None
+    assert cont.preempt(ref) is None             # no host pages
+    assert cont.active_slots == 1                # slot untouched, still live
+    # a slot still chunk-prefilling is never a victim
+    chunky = ContinuousGenerator(cfg, params, g, num_slots=2,
+                                 streamed=False, paged=True, page_size=4,
+                                 prefill_chunk=7)
+    ref = chunky.join("b", "beta")
+    assert ref.index in chunky._prefilling
+    assert chunky.swap_victim() is None
+    assert chunky.preempt(ref) is None
+
+
+# ------------------------------------------- swap_in after resize (regression)
+
+def test_swap_in_after_resize_preserves_trash_isolation(tiny_model):
+    """PR 3's shrink/grow path was never exercised with remapped tables:
+    resize the device pool while a slot is parked host-side, resume onto
+    the resized pool, and keep recycling slots through it — outputs must
+    stay identical and parked/freed rows must stay trash-mapped."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _prompts(6)
+    dense = Generator(cfg, params, g, streamed=False).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                               paged=True, page_size=2)  # max page churn
+    pending = list(enumerate(prompts))[::-1]
+    results = [None] * len(prompts)
+    parked = []
+    tick = 0
+    while pending or cont.active_slots or cont.parked_slots:
+        if tick == 3:                      # park a victim...
+            victim = cont.swap_victim()
+            if victim is not None:
+                h = cont.preempt(victim)
+                if h is not None:
+                    parked.append(h)
+                    # ...its row must be fully trash-mapped while parked
+                    assert (cont.kv._tab[victim.index] == TRASH_PAGE).all()
+            # grow then shrink the pool under the parked slot: the
+            # resumed table must remap onto the surviving page ids
+            grown = cont.set_page_budget(cont.kv.pool.capacity + 10)
+            assert grown == cont.kv.pool.capacity
+        if tick == 5:
+            cont.set_page_budget(max(cont.kv.pool.capacity - 10, 1))
+            for h in list(parked):
+                if cont.resume(h) is not None:
+                    parked.remove(h)
+        if tick > 5:
+            for h in list(parked):
+                if cont.resume(h) is not None:
+                    parked.remove(h)
+        while pending and cont.admit_capacity > 0:
+            key, prompt = pending.pop()
+            assert cont.join(key, prompt) is not None
+        cont.step()
+        for key, text, _ in cont.harvest():
+            results[key] = text
+        tick += 1
+        assert tick < 300
+    assert results == dense
+    assert cont.swap_outs >= 1
+    # freed slots' tables are all trash again; pools fully drained
+    assert (cont.kv._tab == TRASH_PAGE).all()
+    assert cont.kv.pool.used_pages == 0 and cont.kv.host.used_pages == 0
+
+
+def test_host_pool_resize_never_drops_parked_pages(tiny_model):
+    """Shrinking the host budget below a parked slot's footprint clamps
+    (like the device pool's in-use clamp) instead of dropping KV."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                               paged=True, page_size=4)
+    cont.join("a", "alpha beta")
+    handle = cont.preempt(cont.swap_victim())
+    assert handle is not None
+    held = cont.kv.host.used_pages
+    assert held > 0
+    assert cont.set_host_page_budget(0) >= held      # clamped
+    assert cont.resume(handle) is not None
+    while cont.active_slots:
+        cont.step()
+    ((key, _, tokens),) = cont.harvest()
+    assert key == "a" and len(tokens) == MAX_NEW
+    assert cont.set_host_page_budget(0) == 0         # empty pool may vanish
+
+
+# ----------------------------------------------------------- engine mini-trace
+
+def test_engine_swap_admits_beyond_page_budget(tiny_model):
+    """The engine's swap-aware admission (capacity probe + preempt-on-
+    backpressure + FIFO resume) pushes more concurrent requests through
+    a starved page budget than the budget alone could hold — the fig8
+    ``paged_swap`` vs ``paged_tight`` column, exercised deterministically
+    without pipeline threads."""
+    import tempfile
+    import time
+
+    from repro.core.scheduler import BacklogScheduler
+    from repro.retrieval import HashEmbedder, VectorStore
+    from repro.serving.engine import RagdollEngine
+    from repro.serving.request import Request
+
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=4)
+    worst = -(-(CTX + 4) // 4)
+    peaks = {}
+    emb = HashEmbedder(dim=16)
+    texts = [f"doc {i}" for i in range(40)]
+    with tempfile.TemporaryDirectory() as root:
+        store = VectorStore.build(texts, emb, num_partitions=4, root=root)
+        for label, host in (("tight", 0), ("swap", 3 * worst)):
+            gen = ContinuousGenerator(cfg, params, g, num_slots=3,
+                                      streamed=False, paged=True,
+                                      page_size=4, page_budget=2 * worst,
+                                      host_page_budget=host)
+            eng = RagdollEngine(store, emb, gen,
+                                BacklogScheduler(max_batch=8),
+                                BacklogScheduler(max_batch=3))
+            try:
+                reqs = [Request(rid=i, query=f"query {i}",
+                                arrival=time.perf_counter())
+                        for i in range(5)]
+                eng._retrieve_batch(reqs)
+                eng.pipeline.context_queue.put_many(reqs)
+                guard = 0
+                while eng.pump_once() < len(reqs):
+                    guard += 1
+                    assert guard < 500, label
+            finally:
+                eng.streamer.close()
+            assert all(r.done and r.output for r in eng.completed)
+            peaks[label] = gen.peak_in_flight
+            if label == "swap":
+                assert gen.swap_outs > 0 and gen.swap_ins > 0
+            assert gen.parked_slots == 0
+            assert gen.kv.pool.used_pages == 0
+            assert gen.kv.host.used_pages == 0
+    assert peaks["swap"] > peaks["tight"], peaks

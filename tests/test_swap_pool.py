@@ -1,0 +1,199 @@
+"""Property tests for swap-to-host page-pool bookkeeping.
+
+Arbitrary interleavings of admit / ensure / release / swap_out /
+swap_in / resize across the device :class:`PagePool` and the
+:class:`HostPagePool` must never leak a page on either tier, never
+lease a page twice, keep the two tiers disjoint (a slot holds device
+pages XOR host pages, never both), keep every block table exactly
+``ceil(written_len / page_size)`` long across remaps, and make a
+swapped-out slot's old device pages re-issuable immediately.
+
+Pure bookkeeping (no JAX, no page data), so the suite runs in the CI
+fast tier under the bounded deterministic hypothesis profile
+(see tests/conftest.py).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")   # pinned in requirements.txt; skip, never collection-error
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kvpool import (HostPagePool, PageExhausted, PagePool,
+                                  TRASH_PAGE)
+
+SWAP_OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "ensure", "grow", "release",
+                               "swap_out", "swap_in", "cancel",
+                               "resize", "resize_host"]),
+              st.integers(min_value=0, max_value=9),
+              st.integers(min_value=0, max_value=40)),
+    max_size=80)
+
+
+def _two_tier_invariants(pool: PagePool, host: HostPagePool,
+                         lengths, swapped):
+    # device tier: no leaks, no double lease, trash never issued
+    leased = [p for k in pool.holders() for p in pool.table(k)]
+    assert len(leased) == len(set(leased))
+    assert TRASH_PAGE not in leased
+    assert all(1 <= p <= pool.capacity for p in leased)
+    assert pool.free_pages + pool.used_pages == pool.capacity
+    assert pool.reserved_pages <= pool.free_pages
+    # host tier: no leaks, no double lease, ids in range
+    held = [p for k in host.holders() for p in host.pages(k)]
+    assert len(held) == len(set(held))
+    assert all(0 <= p < host.capacity for p in held)
+    assert host.free_pages + host.used_pages == host.capacity
+    # tiers are disjoint: device holders XOR host holders
+    assert not set(pool.holders()) & set(host.holders())
+    assert set(pool.holders()) == set(lengths)
+    assert set(host.holders()) == set(swapped)
+    # block-table length law, across however many remaps happened
+    for k in pool.holders():
+        assert len(pool.table(k)) == pool.blocks_for(lengths[k])
+    for k in host.holders():                      # parked footprint law
+        assert len(host.pages(k)) == pool.blocks_for(swapped[k])
+
+
+@given(cap=st.integers(min_value=1, max_value=12),
+       hcap=st.integers(min_value=0, max_value=10),
+       page=st.integers(min_value=1, max_value=8), ops=SWAP_OPS)
+@settings(max_examples=120)
+def test_swap_interleavings_never_leak_or_double_lease(cap, hcap, page,
+                                                       ops):
+    pool = PagePool(cap, page)
+    host = HostPagePool(hcap, page)
+    lengths = {}      # live slot -> highest ensured length
+    swapped = {}      # parked slot -> length at swap-out
+    nxt = 0
+    for op, pick, amount in ops:
+        if op == "admit":
+            if pool.admit(nxt, amount):
+                lengths[nxt] = min(amount, page)
+                pool.ensure(nxt, lengths[nxt])
+            nxt += 1
+        elif op in ("ensure", "grow") and lengths:
+            k = sorted(lengths)[pick % len(lengths)]
+            want = lengths[k] + amount
+            try:
+                pool.ensure(k, want)
+                lengths[k] = max(lengths[k], want)
+            except PageExhausted:
+                pass                              # state unchanged
+        elif op == "release" and lengths:
+            k = sorted(lengths)[pick % len(lengths)]
+            pool.release(k)
+            del lengths[k]
+            with pytest.raises(KeyError):         # no double free
+                pool.release(k)
+        elif op == "swap_out" and lengths:
+            k = sorted(lengths)[pick % len(lengths)]
+            blocks = len(pool.table(k))
+            got = host.acquire(k, blocks, reserve=pool.reservation(k))
+            if got is None:                       # host full: no change
+                assert not host.can_hold(blocks)
+            else:
+                pages, res = pool.swap_out(k)
+                assert len(pages) == blocks and res == host.reservation(k)
+                swapped[k] = lengths.pop(k)
+        elif op == "swap_in" and swapped:
+            k = sorted(swapped)[pick % len(swapped)]
+            new = pool.swap_in(k, len(host.pages(k)),
+                               host.reservation(k))
+            if new is not None:
+                host.release(k)
+                lengths[k] = swapped.pop(k)
+                # remap law: same logical footprint, fresh physical ids
+                assert len(pool.table(k)) == pool.blocks_for(lengths[k])
+        elif op == "cancel" and swapped:          # parked request dropped
+            k = sorted(swapped)[pick % len(swapped)]
+            host.release(k)
+            del swapped[k]
+            with pytest.raises(KeyError):
+                host.release(k)
+        elif op == "resize":
+            pool.resize(max(amount, 1))
+        elif op == "resize_host":
+            got = host.resize(amount)
+            held = [p for ks in host.holders() for p in host.pages(ks)]
+            assert got >= max(held, default=-1) + 1   # never drops KV
+        _two_tier_invariants(pool, host, lengths, swapped)
+
+
+@given(cap=st.integers(min_value=2, max_value=16),
+       page=st.integers(min_value=1, max_value=4),
+       ln=st.integers(min_value=1, max_value=30))
+@settings(max_examples=80)
+def test_swapped_out_pages_reissuable_immediately(cap, page, ln):
+    """The victim's device pages (and its reservation) are available to
+    a new admission the moment swap_out returns — that is the whole
+    point of preemption."""
+    pool = PagePool(cap, page)
+    host = HostPagePool(cap, page)
+    if not pool.admit("victim", ln):
+        return
+    pool.ensure("victim", ln)
+    before = pool.available_pages
+    old_pages, res = pool.swap_out("victim")
+    assert host.acquire("victim", len(old_pages), res) is not None
+    freed = len(old_pages) + res
+    assert pool.available_pages == before + freed
+    # a same-sized joiner admits and allocates out of the freed pages
+    assert pool.admit("joiner", ln)
+    got = pool.ensure("joiner", ln)
+    assert set(got) <= set(old_pages) | set(range(1, cap + 1))
+    assert len(pool.table("joiner")) == pool.blocks_for(ln)
+    # and the victim swaps back in only once the joiner leaves
+    if pool.swap_in("victim", len(old_pages), res) is None:
+        pool.release("joiner")
+        assert pool.swap_in("victim", len(old_pages), res) is not None
+    assert len(pool.table("victim")) == len(old_pages)
+
+
+@given(cap=st.integers(min_value=2, max_value=12),
+       page=st.integers(min_value=1, max_value=4),
+       ln=st.integers(min_value=1, max_value=20),
+       targets=st.lists(st.integers(min_value=1, max_value=30),
+                        min_size=1, max_size=6))
+@settings(max_examples=80)
+def test_swap_in_after_resize_remaps_consistently(cap, page, ln, targets):
+    """Device-pool resizes while a slot is parked host-side never break
+    the remap: swap_in lands on ids valid for the *current* capacity
+    and the table-length law holds (the shrink/grow regression, at the
+    bookkeeping level)."""
+    pool = PagePool(cap, page)
+    host = HostPagePool(cap, page)
+    if not pool.admit("a", ln):
+        return
+    pool.ensure("a", ln)
+    blocks = len(pool.table("a"))
+    pages, res = pool.swap_out("a")
+    assert host.acquire("a", blocks, res) is not None
+    for t in targets:
+        pool.resize(t)
+    new = pool.swap_in("a", blocks, res)
+    if new is None:                      # pool shrank below the footprint
+        assert blocks + res > pool.available_pages
+        return
+    host.release("a")
+    assert len(new) == blocks
+    assert all(1 <= p <= pool.capacity for p in new)
+    assert len(set(new)) == blocks
+    assert pool.reservation("a") == res  # worst-case guarantee restored
+
+
+def test_host_pool_validates():
+    with pytest.raises(ValueError):
+        HostPagePool(-1, 2)
+    with pytest.raises(ValueError):
+        HostPagePool(2, 0)
+    host = HostPagePool(0, 2)            # c_cpu = 0: swap unavailable
+    assert host.acquire("k", 1) is None
+    assert host.acquire("k", 0) == []    # degenerate zero-block park
+    with pytest.raises(ValueError):
+        host.acquire("k", 1)             # already a holder
+    host.release("k")
+    pool = PagePool(2, 2)
+    pool.admit("k", 2)
+    pool.ensure("k", 2)
+    with pytest.raises(ValueError):
+        pool.swap_in("k", 1)             # already holds device pages
