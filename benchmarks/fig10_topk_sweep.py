@@ -1,6 +1,11 @@
 """Figure 10: average latency vs retrieval top-k (input length grows with
 k). Paper: 8B stays flat (480->529s for k=1->10); 70B grows as generation
-dominates but RAGDoll keeps a 1.8x edge."""
+dominates but RAGDoll keeps a 1.8x edge.
+
+Extension: sharded-retrieval rows — the same RAGDoll workload with the
+IVF partitions split across S retrieval hosts (per-shard disk bandwidth
++ the (Q, k) all-gather, see ``CostModel.retrieval_time``), quantifying
+how much of the retrieval-bound regime sharding buys back."""
 from __future__ import annotations
 
 import dataclasses
@@ -11,6 +16,7 @@ from repro.serving.request import latency_table
 from repro.serving.simulator import SimConfig
 
 TOPK_TO_LEN = {1: 128, 5: 512, 10: 1024}
+SHARD_COUNTS = (1, 2, 4)
 
 
 def run(full: bool = False):
@@ -30,4 +36,18 @@ def run(full: bool = False):
                 f"ragdoll={lat['ragdoll']:.0f}s "
                 f"vllm={lat['serial_vllm']:.0f}s "
                 f"speedup={lat['serial_vllm'] / lat['ragdoll']:.2f}x"))
+    # sharded retrieval (70B, k=5): a placement-aware shard sweep
+    lat_by_shards = {}
+    for s_count in SHARD_COUNTS:
+        cm = cost_model("llama3-70b", retrieval_shards=s_count)
+        sim = make_simulator(cm, optimizer_factory(cm)(), "ragdoll",
+                             base=SimConfig(in_len=TOPK_TO_LEN[5]))
+        res, us = timed(lambda: sim.run(list(arr)))
+        lat_by_shards[s_count] = latency_table(res.requests)["avg_latency"]
+        rows.append((
+            f"fig10/llama3-70b/top5/shards{s_count}",
+            us / max(len(arr), 1),
+            f"ragdoll={lat_by_shards[s_count]:.0f}s "
+            f"vs_1shard="
+            f"{lat_by_shards[1] / lat_by_shards[s_count]:.2f}x"))
     return rows

@@ -10,11 +10,18 @@ Part 2 (real I/O): exact-vs-IVF recall/latency sweep on a synthetic
 clustered corpus with every partition spilled to disk — measures how the
 ``nprobe`` knob converts cluster pruning into partitions *not loaded*
 (the dominant cost, §4.4) and what recall@k it costs.
+
+Part 3 (real I/O): sharded-vs-single-host rows — the same on-disk corpus
+searched through ``ShardedIVFStore`` at shard counts {1, 2, 4}.  At
+equal ``nprobe`` the sharded merge is bit-identical to the single-host
+sweep, so recall_vs_single must be exactly 1.0 (CI-asserted); the rows
+also report per-shard load counts, i.e. how the disk work spreads.
 """
 from __future__ import annotations
 
 import tempfile
 import time
+from typing import Optional
 
 import numpy as np
 
@@ -74,6 +81,56 @@ def ivf_sweep(num_partitions: int = 32, n: int = 4096, dim: int = 64,
     return rows
 
 
+def sharded_sweep(num_partitions: int = 16, n: int = 4096, dim: int = 64,
+                  n_queries: int = 8, top_k: int = 10,
+                  shard_counts=(1, 2, 4), nprobe: Optional[int] = None,
+                  seed: int = 0):
+    """Sharded-vs-single-host rows (real disk I/O): recall_vs_single is
+    the fraction of single-host top-k ids the sharded merge reproduces at
+    equal ``nprobe`` — 1.0 by construction (bit-identical merge), which
+    the CI smoke asserts so the shard/probe/merge contract cannot rot."""
+    from repro.retrieval.distributed import ShardedIVFStore
+
+    nprobe = nprobe if nprobe is not None else max(num_partitions // 4, 1)
+    rows = []
+    vecs = blob_corpus(n, dim, clusters=num_partitions, seed=seed)
+    emb = ArrayEmbedder(vecs)
+    q = perturb_queries(vecs, n_queries, seed=seed + 1)
+    with tempfile.TemporaryDirectory() as root:
+        store = VectorStore.build([str(i) for i in range(n)], emb,
+                                  num_partitions=num_partitions, root=root,
+                                  seed=seed)
+        for pid in list(store.partitions):
+            store.spill(pid)
+        # untimed single-host warmup compiles every kernel shape
+        store.search(q, top_k, nprobe=nprobe)
+        t0 = time.perf_counter()
+        _, single_ids = store.search(q, top_k, nprobe=nprobe)
+        single_t = time.perf_counter() - t0
+        rows.append((f"fig11/sharded/single_host", single_t * 1e6,
+                     f"nprobe={nprobe} recall_vs_single=1.000"))
+        for s_count in shard_counts:
+            sharded = ShardedIVFStore(store, s_count)
+            # untimed warmup compiles this shard count's fuse shapes, so
+            # the timed row measures I/O+search, not JIT (same discipline
+            # as ivf_sweep's exact baseline)
+            sharded.search(q, top_k, nprobe=nprobe)
+            stats = SearchStats()
+            t0 = time.perf_counter()
+            _, ids = sharded.search(q, top_k, nprobe=nprobe, stats=stats)
+            dt = time.perf_counter() - t0
+            sharded.close()
+            recall = np.mean([
+                len(set(a[a >= 0]) & set(b[b >= 0]))
+                / max(len(set(b[b >= 0])), 1)
+                for a, b in zip(ids, single_ids)])
+            rows.append((
+                f"fig11/sharded/shards{s_count}", dt * 1e6,
+                f"nprobe={nprobe} recall_vs_single={recall:.3f} "
+                f"loads={stats.partitions_loaded}"))
+    return rows
+
+
 def run(full: bool = False):
     rows = []
     arr = workload(full)
@@ -106,4 +163,5 @@ def run(full: bool = False):
         f"(paper 1236->890) vllm {lat[('flat', 'serial_vllm')]:.0f}->"
         f"{lat[('diskann', 'serial_vllm')]:.0f}s (paper 2331->2427)"))
     rows.extend(ivf_sweep(n=8192 if full else 4096))
+    rows.extend(sharded_sweep(n=8192 if full else 4096))
     return rows

@@ -37,6 +37,9 @@ class HardwareProfile:
     disk_raw_bw: float = 3.0e9  # raw NVMe streaming (weight tensors)
     jitter: float = 0.35        # scheduling jitter fraction (paper §4.3)
     mem_headroom: float = 0.92  # usable fraction of each memory
+    # cross-host interconnect for the sharded-retrieval (Q, k) all-gather
+    # (per-link effective; ethernet-class on the PF hosts, ICI on TPU)
+    interconnect_bw: float = 12.5e9
 
 
 # Paper platforms (§6.1). gpu_flops are *effective* (derated from peak);
@@ -119,7 +122,8 @@ class CostModel:
                  partition_bytes: float, num_partitions: int,
                  db_dim: int = 768, chunks_per_partition: float = 2e7,
                  partition_mem_overhead: float = 1.45,
-                 partition_load_overhead: float = 1.0):
+                 partition_load_overhead: float = 1.0,
+                 retrieval_shards: int = 1):
         self.hw = hw
         self.mp = mp
         self.partition_bytes = partition_bytes
@@ -131,6 +135,10 @@ class CostModel:
         # case study flips this trade (smaller footprint, slower load).
         self.partition_mem_overhead = partition_mem_overhead
         self.partition_load_overhead = partition_load_overhead
+        # sharded IVF retrieval: each of S hosts owns a disjoint subset
+        # of the partitions with its own disk, so loads and searches run
+        # S-wide in parallel at the cost of one (Q, k) all-gather
+        self.retrieval_shards = max(1, retrieval_shards)
 
     @property
     def partition_mem_bytes(self) -> float:
@@ -145,8 +153,22 @@ class CostModel:
         flops = 2.0 * batch * self.chunks_per_partition * self.db_dim
         return flops / self.hw.cpu_flops
 
+    def topk_allgather_time(self, batch: int, top_k: int = 10,
+                            shards: Optional[int] = None) -> float:
+        """Cross-shard scoreboard fusion: every shard contributes a
+        ``(Q, k)`` board of (f32 score, i32 id) pairs; a ring all-gather
+        moves ``(S-1)/S`` of the total payload per link, plus a per-hop
+        launch latency.  Zero for the single-host deployment."""
+        s = max(1, self.retrieval_shards if shards is None else shards)
+        if s <= 1:
+            return 0.0
+        payload = s * batch * top_k * 8
+        return (payload * (s - 1) / s / self.hw.interconnect_bw
+                + 2e-5 * (s - 1))
+
     def retrieval_time(self, batch: int, resident: int,
-                       nprobe: Optional[int] = None) -> float:
+                       nprobe: Optional[int] = None,
+                       shards: Optional[int] = None) -> float:
         """One retrieval batch over the probed partitions.
 
         ``nprobe=None`` is the exact all-partition sweep; an IVF placement
@@ -156,13 +178,20 @@ class CostModel:
         from disk; loading dominates (paper §4.4), and search of a loaded
         partition overlaps the next load (double-buffered streamer), so
         total ~ max(loads, search) + small residual.
+
+        With ``shards`` (default: the model's ``retrieval_shards``) the
+        probed partitions split across S hosts — each host drives its own
+        disk and CPU, so the per-host critical path is ``ceil(work / S)``
+        — and the shard-local boards fuse with one (Q, k) all-gather.
         """
+        s = max(1, self.retrieval_shards if shards is None else shards)
         n_probe = (self.num_partitions if nprobe is None
                    else max(1, min(nprobe, self.num_partitions)))
         n_load = max(n_probe - resident, 0)
-        load = n_load * self.partition_load_time()
-        search = n_probe * self.partition_search_time(batch)
-        return max(load, search) + 0.1 * min(load, search)
+        load = math.ceil(n_load / s) * self.partition_load_time()
+        search = math.ceil(n_probe / s) * self.partition_search_time(batch)
+        return (max(load, search) + 0.1 * min(load, search)
+                + self.topk_allgather_time(batch, shards=s))
 
     # ---------------------------------------------------------- generation
     def _layer_time(self, flops: float, pcie_bytes: float,

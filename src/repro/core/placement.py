@@ -140,6 +140,29 @@ class PlacementOptimizer:
         row = worst_case_len * self.cost.mp.kv_bytes_per_token
         return int(self.kv_gpu_bytes(p) // max(row, 1.0))
 
+    # ------------------------------------------------- retrieval sharding
+    def shard_resident_budgets(self, p: Placement,
+                               shards: Optional[int] = None) -> List[int]:
+        """Split the placement's resident-partition budget ``P`` across
+        the retrieval shards (even split, remainder to the leading
+        shards — mirroring ``ShardedIVFStore``'s balanced partition
+        assignment, which differs across shards by at most one)."""
+        s = max(1, shards if shards is not None
+                else self.cost.retrieval_shards)
+        base, rem = divmod(max(p.resident_partitions, 0), s)
+        return [base + (1 if i < rem else 0) for i in range(s)]
+
+    def shard_streamer_budgets(self, host_free_bytes: float,
+                               shards: Optional[int] = None) -> List[float]:
+        """Per-shard streamer lookahead budgets from the live placement's
+        host headroom: each shard's disk tier prefetches independently,
+        so the headroom splits evenly (a shard never spends another
+        shard's bytes)."""
+        s = max(1, shards if shards is not None
+                else self.cost.retrieval_shards)
+        per = max(host_free_bytes, 0.0) / s
+        return [per] * s
+
     # ----------------------------------------------------------- project
     def project(self, p: Placement) -> Placement:
         """OOM-recovery ladder: demote KV -> demote weights -> release

@@ -428,7 +428,10 @@ def retrieval_topk_merge(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fuse per-partition scoreboards into a global top-k without a host
     round trip.  The mask is per (query, partition): masked-out (pruned)
-    entries never contribute."""
+    entries never contribute — their scores are forced to NEG_INF *and*
+    their ids to the ``-1`` sentinel, so when fewer than ``k`` real
+    candidates exist the output tail is ``(NEG_INF, -1)``, never a
+    phantom id (all three backends + the ref oracle agree)."""
     if impl is None:
         impl = "pallas" if _on_tpu() else "blocked"
     if impl == "naive":
@@ -452,8 +455,9 @@ def _topk_merge_blocked(part_scores, part_ids, mask, k):
         run_s, run_i = carry
         s, i, m = xs                              # (Q, k), (Q, k), (Q,)
         s = jnp.where(m[:, None], s.astype(jnp.float32), NEG_INF)
+        i = jnp.where(m[:, None], i.astype(jnp.int32), -1)
         cat_s = jnp.concatenate([run_s, s], axis=1)
-        cat_i = jnp.concatenate([run_i, i.astype(jnp.int32)], axis=1)
+        cat_i = jnp.concatenate([run_i, i], axis=1)
         new_s, pos = jax.lax.top_k(cat_s, k)
         return (new_s, jnp.take_along_axis(cat_i, pos, axis=1)), None
 

@@ -166,15 +166,19 @@ def topk_merge_reference(
 
     The mask is per (query, partition): batched IVF probes each query's
     own ``nprobe`` clusters, so one query's pruned partition may be
-    another's best.  Masked-out entries are forced to NEG_INF before the
-    merge, so their ids can only surface when fewer than ``k`` valid
-    candidates exist at all.
+    another's best.  Masked-out entries are forced to (NEG_INF, id -1)
+    before the merge, so a pruned id can never surface — when fewer than
+    ``k`` valid candidates exist at all, the tail of the output is the
+    ``-1`` sentinel (callers like ``VectorStore.get_chunks`` skip it)
+    rather than a phantom hit on whatever chunk id the scoreboard was
+    zero-filled with.
     """
     q, p, kk = part_scores.shape
     s = jnp.where(mask[:, :, None], part_scores.astype(jnp.float32),
                   NEG_INF)
+    i = jnp.where(mask[:, :, None], part_ids.astype(jnp.int32), -1)
     flat_s = s.reshape(q, p * kk)
-    flat_i = part_ids.reshape(q, p * kk)
+    flat_i = i.reshape(q, p * kk)
     top_s, pos = jax.lax.top_k(flat_s, k)
     return top_s, jnp.take_along_axis(flat_i, pos, axis=1)
 

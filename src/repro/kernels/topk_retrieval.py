@@ -128,8 +128,11 @@ def _merge_kernel(mask_ref, s_ref, i_ref, os_ref, oi_ref, s_scr, i_scr, *,
 
     active = mask_ref[...] != 0                                     # (bq, 1)
     s = jnp.where(active, s_ref[...].astype(jnp.float32), NEG_INF)  # (bq, k)
+    # masked-out entries also surrender their ids: a pruned partition's
+    # chunk id must never surface, even when < k valid candidates exist
+    i = jnp.where(active, i_ref[...], -1)
     cat_s = jnp.concatenate([s_scr[...], s], axis=1)                # (bq, 2k)
-    cat_i = jnp.concatenate([i_scr[...], i_ref[...]], axis=1)
+    cat_i = jnp.concatenate([i_scr[...], i], axis=1)
     new_s, pos = jax.lax.top_k(cat_s, k)
     s_scr[...] = new_s
     i_scr[...] = jnp.take_along_axis(cat_i, pos, axis=1)

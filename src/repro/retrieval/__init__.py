@@ -4,4 +4,13 @@ from repro.retrieval.cache import PartitionCache
 from repro.retrieval.streamer import PartitionStreamer
 
 __all__ = ["HashEmbedder", "Partition", "SearchStats", "VectorStore",
-           "PartitionCache", "PartitionStreamer"]
+           "PartitionCache", "PartitionStreamer", "ShardedIVFStore"]
+
+
+def __getattr__(name):
+    # ShardedIVFStore pulls in jax/sharding machinery; keep the package
+    # import light for consumers that only need the host-side store
+    if name == "ShardedIVFStore":
+        from repro.retrieval.distributed import ShardedIVFStore
+        return ShardedIVFStore
+    raise AttributeError(name)

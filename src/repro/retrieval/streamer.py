@@ -39,7 +39,12 @@ class PartitionStreamer:
         self.policy = policy or PrefetchPolicy(max_depth=2, prefill_depth=1)
         self.free_bytes = free_bytes
         self.last_depth: Optional[int] = None   # depth used most recently
-        self._part_bytes: Optional[float] = None   # lazy, sizes are static
+        # lazy partition-size estimate, keyed on the store's layout
+        # version: a rebuild/recluster changes partition sizes, so the
+        # cached value must not survive it (stale sizes mis-derive the
+        # lookahead depth)
+        self._part_bytes: Optional[float] = None
+        self._part_bytes_version: Optional[int] = None
         self._pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="partition-streamer")
 
@@ -57,12 +62,14 @@ class PartitionStreamer:
             # unbounded budget: partition size is irrelevant, and
             # store.partition_bytes() would stat every spilled .npy
             return max(1, self.policy.depth("decode", self.free_bytes, 1.0))
-        if self._part_bytes is None:
+        version = getattr(self.store, "layout_version", None)
+        if self._part_bytes is None or version != self._part_bytes_version:
             try:
                 self._part_bytes = max(float(self.store.partition_bytes()),
                                        1.0)
             except ValueError:        # empty store
                 self._part_bytes = 1.0
+            self._part_bytes_version = version
         return max(1, self.policy.depth("decode", self.free_bytes,
                                         self._part_bytes))
 

@@ -103,6 +103,10 @@ class VectorStore:
         self.partitions: Dict[int, Partition] = {}
         self.chunks: List[str] = []           # chunk texts by global id
         self.centroids: Optional[np.ndarray] = None   # (P, dim)
+        # bumped whenever the partition layout changes (build/recluster);
+        # consumers caching per-partition facts (e.g. the streamer's
+        # partition-size estimate) re-derive when it moves
+        self.layout_version = 0
 
     # ------------------------------------------------------------- building
     @classmethod
@@ -130,7 +134,41 @@ class VectorStore:
             store._centroids_from_partitions(embs)
         else:
             raise ValueError(f"unknown partitioner {partitioner!r}")
+        store.layout_version += 1
         return store
+
+    def recluster(self, num_partitions: Optional[int] = None,
+                  kmeans_iters: int = 10, seed: int = 0) -> None:
+        """Re-run k-means over the full corpus in place (paper: the DB is
+        periodically re-indexed as the corpus drifts).
+
+        Spilled partitions are loaded for the pass; every new partition
+        comes out resident with no disk path (the caller re-spills under
+        the *new* ``layout_version``, so stale ``part*.npy`` files from
+        the previous layout are never reused).  ``layout_version`` is
+        bumped so streamers drop their cached partition-size estimate.
+        """
+        embs = np.zeros((len(self.chunks), self.dim), np.float32)
+        for pid, p in self.partitions.items():
+            if not p.resident:
+                self.load(pid)
+            embs[p.doc_ids] = p.embeddings
+            if p.path is not None:        # superseded layout: no orphans
+                try:
+                    os.remove(p.path)
+                except OSError:
+                    pass
+        ids = np.arange(len(self.chunks))
+        cent, assign = kmeans_centroids(
+            embs, num_partitions or self.num_partitions,
+            iters=kmeans_iters, seed=seed)
+        self.num_partitions = cent.shape[0]
+        self.centroids = cent
+        self.partitions = {
+            pid: Partition(pid=pid, embeddings=embs[assign == pid],
+                           doc_ids=ids[assign == pid])
+            for pid in range(self.num_partitions)}
+        self.layout_version += 1
 
     def _centroids_from_partitions(self, embs: np.ndarray) -> None:
         cent = np.zeros((self.num_partitions, self.dim), np.float32)
@@ -148,10 +186,13 @@ class VectorStore:
             return
         assert self.root is not None, "need a root dir to spill"
         os.makedirs(self.root, exist_ok=True)
-        path = os.path.join(self.root, f"part{pid}.npy")
-        if not os.path.exists(path):
+        if p.path is None:
+            # version-suffixed so a recluster can never resurrect a stale
+            # spill file from the previous partition layout
+            path = os.path.join(
+                self.root, f"part{pid}_v{self.layout_version}.npy")
             np.save(path, p.embeddings)
-        p.path = path
+            p.path = path
         p.embeddings = None
 
     def load(self, pid: int) -> float:
@@ -240,12 +281,36 @@ class VectorStore:
         if stats:
             stats.partitions_pruned += self.num_partitions - len(pids)
 
+        board_s, board_i, searched = self.sweep_boards(
+            queries, pids, top_k, impl=impl, streamer=streamer, stats=stats)
+        scores, gids = ops.retrieval_topk_merge(
+            board_s, board_i, qmask & searched[None, :], top_k, impl=impl)
+        return np.asarray(scores), np.asarray(gids)
+
+    def sweep_boards(self, queries: np.ndarray, pids: Sequence[int],
+                     top_k: int, impl: Optional[str] = None,
+                     streamer=None, stats: Optional[SearchStats] = None
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-partition top-k sweep over ``pids`` without the merge.
+
+        Returns fixed-shape ``(Q, P, k)`` score/id scoreboards plus the
+        ``(P,)`` searched mask — one compiled merge kernel then serves
+        every probe set.  Unfilled scoreboard rows carry the ``-1``
+        sentinel id at NEG_INF, so a partition holding fewer than ``k``
+        chunks can never mint phantom hits on chunk 0.  Sharded callers
+        (``ShardedIVFStore``) run one sweep per shard with their own
+        streamer and fuse the boards themselves.
+
+        Residency discipline: any partition this sweep loads is released
+        again even if a kernel raises or the caller's streamer is torn
+        down mid-sweep (try/finally) — an aborted sweep must not leak
+        host memory.
+        """
+        nq = queries.shape[0]
         q = queries.astype(np.float32)
-        # fixed-shape (Q, P, k) scoreboards + per-query probe mask: one
-        # compiled merge kernel serves every nprobe setting
         board_s = np.full((nq, self.num_partitions, top_k), -1e30,
                           np.float32)
-        board_i = np.zeros((nq, self.num_partitions, top_k), np.int32)
+        board_i = np.full((nq, self.num_partitions, top_k), -1, np.int32)
         searched = np.zeros(self.num_partitions, bool)
 
         def sweep():
@@ -263,32 +328,42 @@ class VectorStore:
                             stats.load_seconds += dt
                     yield pid, loaded_here
 
-        for pid, loaded_here in sweep():
-            p = self.partitions[pid]
-            if p.embeddings is None:      # raced with a cache release
-                dt = self.load(pid)
-                loaded_here = True
+        loaded_pending: set = set()
+        try:
+            for pid, loaded_here in sweep():
+                p = self.partitions[pid]
+                if p.embeddings is None:      # raced with a cache release
+                    dt = self.load(pid)
+                    loaded_here = True
+                    if stats:
+                        stats.partitions_loaded += 1
+                        stats.load_seconds += dt
+                if loaded_here:
+                    loaded_pending.add(pid)
+                t0 = time.perf_counter()
+                k_eff = min(top_k, p.embeddings.shape[0])
+                if k_eff > 0:
+                    s, i = ops.retrieval_topk(q, p.embeddings, k_eff,
+                                              impl=impl)
+                    board_s[:, pid, :k_eff] = np.asarray(s)
+                    board_i[:, pid, :k_eff] = p.doc_ids[np.asarray(i)]
+                searched[pid] = True
                 if stats:
-                    stats.partitions_loaded += 1
-                    stats.load_seconds += dt
-            t0 = time.perf_counter()
-            k_eff = min(top_k, p.embeddings.shape[0])
-            if k_eff > 0:
-                s, i = ops.retrieval_topk(q, p.embeddings, k_eff, impl=impl)
-                board_s[:, pid, :k_eff] = np.asarray(s)
-                board_i[:, pid, :k_eff] = p.doc_ids[np.asarray(i)]
-            searched[pid] = True
-            if stats:
-                stats.search_seconds += time.perf_counter() - t0
-                stats.partitions_searched += 1
-            if loaded_here:
+                    stats.search_seconds += time.perf_counter() - t0
+                    stats.partitions_searched += 1
+                if loaded_here:
+                    self.release(pid)
+                    loaded_pending.discard(pid)
+        finally:
+            for pid in loaded_pending:        # aborted sweep: no leaks
                 self.release(pid)
-        scores, gids = ops.retrieval_topk_merge(
-            board_s, board_i, qmask & searched[None, :], top_k, impl=impl)
-        return np.asarray(scores), np.asarray(gids)
+        return board_s, board_i, searched
 
     def get_chunks(self, ids: np.ndarray) -> List[List[str]]:
-        return [[self.chunks[j] for j in row] for row in ids]
+        """Chunk texts for a (Q, k) id matrix; ``-1`` sentinel rows from
+        an under-filled top-k (fewer candidates than ``k``) are skipped
+        rather than aliased to chunk 0."""
+        return [[self.chunks[j] for j in row if j >= 0] for row in ids]
 
     # ---------------------------------------------------------- bookkeeping
     def partition_bytes(self) -> int:

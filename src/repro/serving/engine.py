@@ -23,6 +23,12 @@ The generation stage has two disciplines, chosen by the generator type:
   (swap-to-host, vLLM-style) instead of stalling, and swaps parked
   requests back in FIFO once the join backlog clears.
 
+With ``retrieval_shards > 1`` the retrieval stage runs through a
+:class:`~repro.retrieval.distributed.ShardedIVFStore`: the IVF
+partitions split centroid-aware across shards, each shard sweeps with
+its own partition streamer, and the policy boundary splits the
+placement's host headroom across the per-shard residency budgets.
+
 ``SerialRAGEngine`` is the baseline shape (vLLMRAG/AccRAG-style): one
 worker retrieves then generates per batch, in arrival order.
 """
@@ -70,7 +76,8 @@ class RagdollEngine:
                  optimizer: Optional[PlacementOptimizer] = None,
                  initial_partitions: Optional[int] = None,
                  streamer: Optional[PartitionStreamer] = None,
-                 policy_every: int = 8):
+                 policy_every: int = 8,
+                 retrieval_shards: int = 1):
         self.store = store
         self.embedder = embedder
         self.generator = generator
@@ -83,6 +90,14 @@ class RagdollEngine:
         self._owns_streamer = streamer is None
         self.streamer = streamer if streamer is not None else \
             PartitionStreamer(store, PrefetchPolicy(max_depth=2))
+        # sharded IVF retrieval: partition the store across S shards,
+        # each with its own streamer/disk tier; the policy boundary
+        # splits the host headroom across them (the single streamer
+        # above stays for the S=1 path and injected-streamer callers)
+        self.sharded: Optional["ShardedIVFStore"] = None
+        if retrieval_shards > 1:
+            from repro.retrieval.distributed import ShardedIVFStore
+            self.sharded = ShardedIVFStore(store, retrieval_shards)
         self.nprobe: Optional[int] = None   # set by the placement policy
         self.policy_trace: List[PolicyEvent] = []
         self.retrieval_stats = SearchStats()   # cumulative, for reporting
@@ -119,9 +134,13 @@ class RagdollEngine:
         # IVF probe prunes the sweep; resident partitions answer from RAM
         # and the streamer double-buffers the remaining disk loads
         stats = self.retrieval_stats
-        scores, ids = self.store.search(
-            queries, reqs[0].top_k, nprobe=self.nprobe,
-            streamer=self.streamer, stats=stats)
+        if self.sharded is not None:
+            scores, ids = self.sharded.search(
+                queries, reqs[0].top_k, nprobe=self.nprobe, stats=stats)
+        else:
+            scores, ids = self.store.search(
+                queries, reqs[0].top_k, nprobe=self.nprobe,
+                streamer=self.streamer, stats=stats)
         chunks = self.store.get_chunks(ids)
         t1 = time.perf_counter()
         for r, ch in zip(reqs, chunks):
@@ -276,7 +295,13 @@ class RagdollEngine:
         hw = self.opt.cost.hw
         host_free = (hw.cpu_mem * hw.mem_headroom
                      - self.opt.memory_use(placement).cpu)
-        self.streamer.set_budget(max(host_free, 0.0))
+        if self.sharded is not None:
+            # per-shard disk tiers: the placement's host headroom splits
+            # across the shards' streamers (each owns its own budget)
+            self.sharded.set_budgets(self.opt.shard_streamer_budgets(
+                host_free, self.sharded.num_shards))
+        else:
+            self.streamer.set_budget(max(host_free, 0.0))
         self.policy_trace.append(PolicyEvent(
             t=time.perf_counter(), gen_batch=b,
             resident_partitions=placement.resident_partitions,
@@ -318,6 +343,8 @@ class RagdollEngine:
         self.pipeline.stop()
         if self._owns_streamer:     # an injected streamer outlives us
             self.streamer.close()
+        if self.sharded is not None:
+            self.sharded.close()
 
     def submit(self, req: Request) -> None:
         req.arrival = time.perf_counter() if req.arrival is None \

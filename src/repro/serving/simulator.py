@@ -89,6 +89,11 @@ class SimConfig:
     # of waiting for a natural leave; parked slots resume FIFO once the
     # join backlog clears
     swap: bool = False
+    # sharded IVF retrieval: probed partitions split across S hosts
+    # (per-shard disk/CPU in parallel + one (Q, k) all-gather — see
+    # CostModel.retrieval_time); None defers to the cost model's own
+    # retrieval_shards
+    retrieval_shards: Optional[int] = None
 
 
 @dataclass
@@ -172,7 +177,8 @@ class ServingSimulator:
 
     def _ret_time(self, b: int, resident: int,
                   nprobe: Optional[int] = None) -> float:
-        return self.cost.retrieval_time(b, resident, nprobe=nprobe)
+        return self.cost.retrieval_time(b, resident, nprobe=nprobe,
+                                        shards=self.sim.retrieval_shards)
 
     def _nprobe(self, p: Placement) -> Optional[int]:
         """Serial baselines (vLLMRAG/AccRAG) run the exact all-partition

@@ -152,3 +152,74 @@ def test_dryrun_cell_on_8_devices():
         print("OK", rep.bottleneck, rep.coll_by_kind)
     """)
     assert "OK" in out
+
+
+def test_distributed_topk_uneven_corpus():
+    """Regression: ``distributed_topk`` hard-asserted ``n % shards == 0``.
+    Uneven corpora are padded with validity-masked sentinel rows that can
+    never win — even when every real score is negative."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.sharding.specs import MeshContext
+        from repro.retrieval.distributed import distributed_topk
+        from repro.kernels import ref
+        mesh = make_mesh((4, 2), ("data", "model"))
+        ctx = MeshContext(mesh, batch_axes=("data",))
+        r = np.random.default_rng(0)
+        # 1021 % 4 != 0; negative-leaning scores so zero-padding would
+        # have let pad rows win shard-local top-k slots
+        db = jnp.asarray(-np.abs(r.normal(size=(1021, 32))), jnp.float32)
+        qs = jnp.asarray(np.abs(r.normal(size=(8, 32))), jnp.float32)
+        ws, wi = ref.topk_reference(qs, db, 7)
+        gs, gi = distributed_topk(qs, db, 7, ctx)
+        assert np.allclose(np.asarray(gs), np.asarray(ws), atol=1e-4)
+        assert (np.asarray(gi) == np.asarray(wi)).all()
+        assert (np.asarray(gi) < 1021).all()
+        # k > total rows: the tail must be (-1, NEG_INF) sentinels, not
+        # a shard-local -1 aliased into a real-looking global id
+        tiny = jnp.asarray(-np.abs(r.normal(size=(10, 32))), jnp.float32)
+        gs2, gi2 = distributed_topk(qs, tiny, 12, ctx)
+        gs2, gi2 = np.asarray(gs2), np.asarray(gi2)
+        for row_s, row_i in zip(gs2, gi2):
+            real = row_i >= 0
+            assert real.sum() == 10, row_i
+            assert sorted(row_i[real]) == list(range(10)), row_i
+            assert (row_i[~real] == -1).all(), row_i
+            assert (row_s[~real] <= -1e29).all(), row_s
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_ivf_store_mesh_merge_matches_single_host():
+    """ShardedIVFStore on a real 4-way mesh: the shard_map all-gather
+    merge path returns the single-host result."""
+    out = _run("""
+        import numpy as np
+        from repro.launch.mesh import make_mesh
+        from repro.sharding.specs import MeshContext
+        from repro.retrieval.distributed import ShardedIVFStore
+        from repro.retrieval.synthetic import (ArrayEmbedder, blob_corpus,
+                                               perturb_queries)
+        from repro.retrieval.vectorstore import VectorStore
+        mesh = make_mesh((4, 2), ("data", "model"))
+        ctx = MeshContext(mesh, batch_axes=("data",))
+        vecs = blob_corpus(n=900, dim=24, clusters=8, seed=1)
+        store = VectorStore.build([str(i) for i in range(900)],
+                                  ArrayEmbedder(vecs), num_partitions=8,
+                                  seed=1)
+        q = perturb_queries(vecs, 6, seed=2)
+        for nprobe in (None, 2):
+            s1, i1 = store.search(q, 9, nprobe=nprobe)
+            sharded = ShardedIVFStore(store, 4, ctx=ctx,
+                                      use_streamers=False)
+            assert sharded.ctx is not None
+            assert sharded.ctx.dp_size == sharded.num_shards
+            s2, i2 = sharded.search(q, 9, nprobe=nprobe)
+            sharded.close()
+            assert (np.asarray(i1) == np.asarray(i2)).all(), nprobe
+            assert np.allclose(np.asarray(s1), np.asarray(s2)), nprobe
+        print("OK")
+    """)
+    assert "OK" in out

@@ -243,3 +243,132 @@ def test_nprobe_is_a_placement_dimension():
     # probing fewer clusters can only speed retrieval up
     ts = [cm.retrieval_time(16, 8, nprobe=n) for n in (8, 16, 32, None)]
     assert ts[0] <= ts[1] <= ts[2] == ts[3]
+
+
+# ------------------------------------------------- retrieval-correctness bugs
+
+def test_topk_beyond_candidates_returns_sentinels_not_phantom_chunk0():
+    """Regression: when the probed partitions hold fewer than ``top_k``
+    candidates, the zero-filled scoreboard used to surface global chunk
+    id 0 at score -1e30 as if it were a real hit.  The tail must be the
+    ``-1`` sentinel and ``get_chunks`` must skip it."""
+    vecs = blob_corpus(n=12, dim=16, clusters=4, seed=0)
+    emb = ArrayEmbedder(vecs)
+    store = VectorStore.build([str(i) for i in range(12)], emb,
+                              num_partitions=4, seed=0)
+    q = vecs[[5]]
+    top_k = 10
+    _, qmask = store.probe(q, nprobe=1)
+    candidates = sum(len(store.partitions[p].doc_ids)
+                     for p in np.nonzero(qmask[0])[0])
+    assert candidates < top_k          # test precondition: under-filled
+    scores, ids = store.search(q, top_k, nprobe=1)
+    row_ids, row_s = ids[0], scores[0]
+    real = row_ids >= 0
+    assert real.sum() == candidates
+    assert (row_ids[~real] == -1).all()
+    assert (row_s[~real] == np.float32(-1e30)).all()
+    # id 0 may only appear if chunk 0 genuinely lives in a probed part
+    probed_ids = np.concatenate([store.partitions[p].doc_ids
+                                 for p in np.nonzero(qmask[0])[0]])
+    if 0 not in probed_ids:
+        assert 0 not in row_ids
+    chunks = store.get_chunks(ids)
+    assert len(chunks[0]) == candidates      # sentinels skipped
+
+
+def test_merge_backends_emit_sentinel_ids_for_masked_entries():
+    """All three merge backends + the oracle force masked entries to the
+    (-1, NEG_INF) sentinel — a pruned partition's id can never surface,
+    even when fewer than k valid candidates exist."""
+    Q, P, k = 2, 3, 4
+    s = np.zeros((Q, P, k), np.float32)
+    i = np.arange(Q * P * k, dtype=np.int32).reshape(Q, P, k)
+    mask = np.zeros((Q, P), bool)
+    mask[:, 1] = True                       # only partition 1 is valid
+    s[:, 1] = [[3.0, 2.0, 1.0, 0.5]] * Q
+    for impl in ("naive", "blocked", "pallas"):
+        gs, gi = ops.retrieval_topk_merge(jnp.asarray(s), jnp.asarray(i),
+                                          jnp.asarray(mask), k, impl=impl)
+        gi = np.asarray(gi)
+        valid = np.asarray(gs) > -1e29
+        for qi in range(Q):
+            allowed = set(i[qi, 1])         # the one unmasked partition
+            assert set(gi[qi][valid[qi]]) <= allowed, impl
+        assert (gi[~valid] == -1).all(), impl
+
+
+def test_aborted_sweep_releases_loaded_partitions(blob_store, monkeypatch):
+    """Regression: a sweep that raises after loading partitions used to
+    leave them resident forever (residency leak).  Both the synchronous
+    and the streamer path must release on abort."""
+    store, vecs = blob_store
+    for pid in range(store.num_partitions):
+        store.spill(pid)
+    q = vecs[[10]]
+    real_topk = ops.retrieval_topk
+    calls = {"n": 0}
+
+    def explode_on_third(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] >= 3:
+            raise RuntimeError("injected kernel failure")
+        return real_topk(*a, **kw)
+
+    monkeypatch.setattr(ops, "retrieval_topk", explode_on_third)
+    with pytest.raises(RuntimeError):
+        store.search(q, 5, nprobe=6)
+    assert store.resident_set() == []       # sync path: no leak
+
+    calls["n"] = 0
+    streamer = PartitionStreamer(store)
+    with pytest.raises(RuntimeError):
+        store.search(q, 5, nprobe=6, streamer=streamer)
+    streamer.close()
+    assert store.resident_set() == []       # streamer path: no leak
+
+
+def test_streamer_part_bytes_cache_invalidated_on_recluster(blob_store):
+    """Regression: the streamer cached its partition-size estimate
+    forever; a recluster that changes partition sizes must invalidate it
+    (stale sizes mis-derive the lookahead depth)."""
+    from repro.core.prefetch import PrefetchPolicy
+    store, vecs = blob_store
+    streamer = PartitionStreamer(store, PrefetchPolicy(max_depth=8),
+                                 free_bytes=3.0 * store.partition_bytes())
+    streamer.depth()
+    before = streamer._part_bytes
+    assert before == store.partition_bytes()
+    store.recluster(num_partitions=2)       # ~4x bigger partitions
+    streamer.depth()
+    assert streamer._part_bytes == store.partition_bytes() != before
+    streamer.close()
+
+
+def test_recluster_spill_never_reuses_stale_files(blob_store):
+    """After a recluster, spilling must write fresh (version-suffixed)
+    files — reloading must round-trip the *new* partition contents."""
+    store, vecs = blob_store
+    for pid in range(store.num_partitions):
+        store.spill(pid)                    # v1 files on disk
+        store.load(pid)
+    old_paths = [store.partitions[pid].path
+                 for pid in range(store.num_partitions)]
+    store.recluster(num_partitions=4, seed=9)
+    assert store.num_partitions == 4
+    # superseded spill files are unlinked, not orphaned (repeated
+    # recluster+spill cycles must not grow the root unboundedly)
+    import os
+    assert not any(os.path.exists(p) for p in old_paths)
+    want = {pid: store.partitions[pid].embeddings.copy()
+            for pid in range(4)}
+    for pid in range(4):
+        store.spill(pid)
+        store.load(pid)
+        np.testing.assert_array_equal(store.partitions[pid].embeddings,
+                                      want[pid])
+    # search over the re-clustered layout still matches brute force
+    q = vecs[[3, 700]]
+    s, ids = store.search(q, top_k=9)
+    ws, wi = ref.topk_reference(jnp.asarray(q), jnp.asarray(vecs), 9)
+    assert (np.asarray(wi) == ids).all()
