@@ -8,7 +8,11 @@ reports dense vs paged KV-cache percentiles side by side — the
 ROADMAP item wiring the engine's continuous path into the percentile
 benchmarks — plus a swap-to-host column: at the same starved GPU page
 budget, preemption (``paged_swap``) admits a strictly larger concurrent
-batch than pure join backpressure (``paged_tight``)."""
+batch than pure join backpressure (``paged_tight``) — plus a
+shared-prefix workload pair: identical prompts (the recurring-chunk RAG
+pattern) with the radix prefix cache off/on, where the cached run
+prefills a fraction of the tokens per request (TTFT collapse; CI
+asserts the token counters)."""
 from __future__ import annotations
 
 import tempfile
@@ -33,7 +37,8 @@ def _drive_deterministic(eng, reqs):
 
 
 def engine_rows(n_requests: int = 10, num_slots: int = 3,
-                variants=("dense", "paged", "paged_tight", "paged_swap")):
+                variants=("dense", "paged", "paged_tight", "paged_swap",
+                          "prefix_off", "prefix_on")):
     """Continuous-trace percentiles from the real mini-engine.
 
     ``dense`` and ``paged`` run identical request streams behind the
@@ -45,6 +50,17 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
     host pool, so preemption admits a strictly larger concurrent batch
     at the same device budget (``peak=`` in the row text; CI asserts
     the inequality).
+
+    ``prefix_off`` / ``prefix_on`` run a shared-prefix workload (every
+    request asks the same query, so retrieval builds identical prompts
+    — the recurring-chunk pattern prefix caching targets) on a ragged
+    context (``ctx % page_size != 0``, so the boundary-page copy and
+    the donor-tail CoW path are both live).  The row text reports
+    deterministic token counters: ``ttft_tok`` (mean prompt tokens
+    prefilled per request — the TTFT proxy), ``hit_tok`` (tokens served
+    from cached pages) and ``cow`` (copy-on-write detaches).  CI
+    asserts ``prefix_on`` prefills strictly fewer tokens per request
+    than ``prefix_off`` with a nonzero hit count.
     """
     import jax
     import jax.numpy as jnp
@@ -70,6 +86,7 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
         store.spill(3)
         for variant in variants:
             kw = {}
+            prefix = variant.startswith("prefix")
             if variant == "paged":
                 kw = dict(paged=True, prefill_chunk=16)
             elif variant in ("paged_tight", "paged_swap"):
@@ -77,27 +94,39 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
                           host_page_budget=(num_slots * worst
                                             if variant == "paged_swap"
                                             else 0))
+            elif prefix:
+                kw = dict(paged=True,
+                          prefix_cache=(variant == "prefix_on"))
+            # the prefix pair runs a ragged context so the partial
+            # boundary page (copied at join) and the donor's shared
+            # tail page (CoW on first decode) are both exercised
+            ctx_v = ctx - 2 if prefix else ctx
             gen = ContinuousGenerator(
                 cfg, params,
-                GeneratorConfig(ctx_len=ctx, max_new_tokens=max_new),
+                GeneratorConfig(ctx_len=ctx_v, max_new_tokens=max_new),
                 num_slots=num_slots, streamed=False, page_size=page, **kw)
             eng = RagdollEngine(store, emb, gen,
                                 BacklogScheduler(max_batch=8),
                                 BacklogScheduler(max_batch=num_slots),
                                 initial_partitions=3, policy_every=2)
-            deterministic = variant in ("paged_tight", "paged_swap")
+            deterministic = variant in ("paged_tight", "paged_swap") \
+                or prefix
+            # shared-prefix workload: every request asks the same query,
+            # so retrieval assembles identical prompts
+            queries = ["recurring shared question" if prefix
+                       else f"query {i}" for i in range(n_requests)]
             if deterministic:
                 try:
-                    reqs = [Request(rid=i, query=f"query {i}",
+                    reqs = [Request(rid=i, query=q,
                                     arrival=time.perf_counter())
-                            for i in range(n_requests)]
+                            for i, q in enumerate(queries)]
                     reqs = _drive_deterministic(eng, reqs)
                 finally:
                     eng.streamer.close()
             else:
                 eng.start()
-                for i in range(n_requests):
-                    eng.submit(Request(rid=i, query=f"query {i}",
+                for i, q in enumerate(queries):
+                    eng.submit(Request(rid=i, query=q,
                                        arrival=time.perf_counter()))
                 reqs = eng.drain(n_requests, timeout=180)
                 eng.stop()
@@ -109,6 +138,10 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
             if deterministic:
                 info += (f" peak={gen.peak_in_flight}"
                          f" swaps={gen.swap_outs}")
+            if prefix:
+                info += (f" ttft_tok={gen.prefill_tokens / max(gen.joins, 1):.1f}"
+                         f" hit_tok={gen.prefix_hit_tokens}"
+                         f" cow={gen.cow_copies}")
             rows.append((f"fig8/engine/{variant}",
                          1e6 * sum(lat) / len(lat), info))
     return rows

@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Docs lint: fail if README/docs reference paths that don't exist.
+
+Scans the markdown docs (README.md and docs/**/*.md) for
+
+- repo-relative file paths in code fences and inline code spans
+  (anything shaped like ``dir/file.ext`` or a bare known top-level
+  file such as ``ROADMAP.md``), and
+- ``python -m <module>`` / ``python <script.py>`` entry points in
+  code fences,
+
+and exits nonzero when any target does not exist in the repo. Run by
+CI (see .github/workflows/ci.yml) so the documentation can never rot
+ahead of the tree:
+
+    python scripts/check_docs.py
+"""
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = [REPO / "README.md", *sorted((REPO / "docs").glob("**/*.md"))]
+
+# dir/file.ext style (optionally with a ::member suffix), or a bare
+# UPPERCASE.md top-level file.  Extensions we promise to keep honest.
+PATH_RE = re.compile(
+    r"(?<![\w./-])((?:[\w.-]+/)+[\w.-]+\.(?:py|md|txt|yml|yaml|ini|toml)"
+    r"|[A-Z][A-Z0-9_]+\.md)(?:::[\w.]+)?(?![\w/-])")
+PYMOD_RE = re.compile(r"python(?:3)?\s+-m\s+([\w.]+)")
+PYFILE_RE = re.compile(r"python(?:3)?\s+((?:[\w.-]+/)*[\w.-]+\.py)")
+
+
+def _code_regions(text):
+    """Yield (kind, snippet): fenced blocks and inline code spans."""
+    fence = re.compile(r"```.*?\n(.*?)```", re.S)
+    for m in fence.finditer(text):
+        yield "fence", m.group(1)
+    stripped = fence.sub("", text)
+    for m in re.finditer(r"`([^`\n]+)`", stripped):
+        yield "inline", m.group(1)
+
+
+def _module_exists(mod):
+    """Resolve a ``python -m`` target against src/, the repo root, or
+    the installed environment (e.g. ``python -m pytest``)."""
+    for root in (REPO / "src", REPO):
+        p = root.joinpath(*mod.split("."))
+        if p.with_suffix(".py").is_file() or (p / "__main__.py").is_file():
+            return True
+    try:
+        import importlib.util
+        return importlib.util.find_spec(mod) is not None
+    except (ImportError, ValueError):
+        return False
+
+
+def check(doc: Path):
+    errors = []
+    text = doc.read_text()
+    for kind, snippet in _code_regions(text):
+        for m in PATH_RE.finditer(snippet):
+            rel = m.group(1)
+            if not (REPO / rel).exists():
+                errors.append(f"{doc.relative_to(REPO)}: {kind} references "
+                              f"missing path {rel!r}")
+        if kind != "fence":
+            continue
+        for m in PYMOD_RE.finditer(snippet):
+            if not _module_exists(m.group(1)):
+                errors.append(f"{doc.relative_to(REPO)}: fence references "
+                              f"missing module {m.group(1)!r}")
+        for m in PYFILE_RE.finditer(snippet):
+            if not (REPO / m.group(1)).is_file():
+                errors.append(f"{doc.relative_to(REPO)}: fence references "
+                              f"missing script {m.group(1)!r}")
+    return errors
+
+
+def main():
+    missing = [d for d in (REPO / "README.md", REPO / "docs")
+               if not d.exists()]
+    if missing:
+        for d in missing:
+            print(f"check_docs: required doc missing: "
+                  f"{d.relative_to(REPO)}", file=sys.stderr)
+        return 1
+    errors = [e for doc in DOCS for e in check(doc)]
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    checked = sum(1 for _ in DOCS)
+    if not errors:
+        print(f"check_docs: {checked} docs OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

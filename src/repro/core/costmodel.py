@@ -207,11 +207,18 @@ class CostModel:
 
     def prefill_time(self, batch: int, in_len: int, w_gpu: float,
                      c_gpu: float, depth: int = 1,
-                     w_cpu: Optional[float] = None) -> float:
+                     w_cpu: Optional[float] = None,
+                     cached_len: int = 0) -> float:
+        """One prefill pass.  ``cached_len`` tokens of the prompt are
+        already resident as shared KV pages (radix prefix cache) — they
+        cost no FLOPs and no KV offload traffic, only the suffix
+        ``in_len - cached_len`` is computed, which is exactly the TTFT
+        collapse the prefix cache buys (fig8 shared-prefix row)."""
         mp = self.mp
         w_cpu = (1 - w_gpu) if w_cpu is None else w_cpu
         w_disk = max(0.0, 1 - w_gpu - w_cpu)
-        tokens = batch * in_len
+        live = max(in_len - max(cached_len, 0), 1)
+        tokens = batch * live
         flops_l = mp.flops_per_token() * tokens / mp.n_layers
         # quadratic attention term (rough: included via 10% margin)
         kv_off = (1 - c_gpu) * mp.kv_bytes(batch, in_len) / mp.n_layers
@@ -237,9 +244,10 @@ class CostModel:
     def generation_time(self, batch: int, in_len: int, out_len: int,
                         w_gpu: float, c_gpu: float,
                         depth_prefill: int = 1, depth_decode: int = 4,
-                        w_cpu: Optional[float] = None) -> GenCosts:
+                        w_cpu: Optional[float] = None,
+                        cached_len: int = 0) -> GenCosts:
         pre = self.prefill_time(batch, in_len, w_gpu, c_gpu, depth_prefill,
-                                w_cpu=w_cpu)
+                                w_cpu=w_cpu, cached_len=cached_len)
         tok = self.decode_time_per_token(batch, in_len + out_len // 2,
                                          w_gpu, c_gpu, depth_decode,
                                          w_cpu=w_cpu)
@@ -249,9 +257,11 @@ class CostModel:
                               w_gpu: float, c_gpu: float,
                               depth_prefill: int = 1,
                               depth_decode: int = 4,
-                              w_cpu: Optional[float] = None) -> float:
+                              w_cpu: Optional[float] = None,
+                              cached_len: int = 0) -> float:
         g = self.generation_time(batch, in_len, out_len, w_gpu, c_gpu,
-                                 depth_prefill, depth_decode, w_cpu=w_cpu)
+                                 depth_prefill, depth_decode, w_cpu=w_cpu,
+                                 cached_len=cached_len)
         return g.prefill + out_len * g.per_token
 
     # ------------------------------------------------------------- weights

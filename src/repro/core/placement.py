@@ -55,7 +55,8 @@ class MemoryUse:
 class PlacementOptimizer:
     def __init__(self, cost: CostModel, avg_ctx_len: int = 512,
                  avg_out_len: int = 128, min_nprobe_frac: float = 0.25,
-                 kv_page_size: int = 16):
+                 kv_page_size: int = 16,
+                 prefix_cache_frac: float = 0.25):
         self.cost = cost
         self.avg_ctx = avg_ctx_len
         self.avg_out = avg_out_len
@@ -65,6 +66,11 @@ class PlacementOptimizer:
         # KV paging granularity: the unit the placement trades between
         # accelerator KV pages and host partition cache
         self.kv_page_size = kv_page_size
+        # device-KV share the radix prefix cache may hold (cached prompt
+        # prefixes compete with live KV pages for the same pool)
+        if not 0.0 <= prefix_cache_frac <= 1.0:
+            raise ValueError("prefix_cache_frac must be in [0, 1]")
+        self.prefix_cache_frac = prefix_cache_frac
 
     def _nprobe_grid(self) -> List[int]:
         p_max = self.cost.num_partitions
@@ -123,6 +129,19 @@ class PlacementOptimizer:
         page_bytes = self.cost.mp.kv_page_bytes(page_size
                                                 or self.kv_page_size)
         return int(self.kv_host_bytes(p) // max(page_bytes, 1.0))
+
+    def prefix_cache_page_budget(self, p: Placement,
+                                 page_size: Optional[int] = None) -> int:
+        """Device pages the radix prefix cache may hold under this
+        placement — ``prefix_cache_frac`` of the accelerator KV page
+        budget.  Cached prefixes and live KV pages share one physical
+        pool, so this is an *arbitration cap inside*
+        :meth:`kv_page_budget`, not additional memory: the engine hands
+        it to ``ContinuousGenerator.retarget(prefix_page_budget=...)``
+        at every policy boundary and the cache demotes LRU pages to the
+        host tier until it fits."""
+        return int(self.prefix_cache_frac
+                   * self.kv_page_budget(p, page_size))
 
     def paged_batch_capacity(self, p: Placement,
                              page_size: Optional[int] = None,

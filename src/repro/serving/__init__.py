@@ -3,10 +3,15 @@ from repro.serving.engine import RagdollEngine, SerialRAGEngine
 from repro.serving.generator import (ContinuousGenerator, Generator,
                                      GeneratorConfig, SlotRef, SlotTable,
                                      StaleSlotError)
+from repro.serving.kvpool import (HostPagePool, PagedKVCache, PageExhausted,
+                                  PagePool)
+from repro.serving.prefixcache import PrefixCache, PrefixCacheStats
 from repro.serving.simulator import (ServingSimulator, SimConfig,
                                      poisson_workload)
 
 __all__ = ["Request", "latency_table", "percentile", "RagdollEngine",
            "SerialRAGEngine", "ServingSimulator", "SimConfig",
            "poisson_workload", "Generator", "GeneratorConfig",
-           "ContinuousGenerator", "SlotTable", "SlotRef", "StaleSlotError"]
+           "ContinuousGenerator", "SlotTable", "SlotRef", "StaleSlotError",
+           "PagePool", "PagedKVCache", "HostPagePool", "PageExhausted",
+           "PrefixCache", "PrefixCacheStats"]

@@ -66,6 +66,8 @@ class PolicyEvent:
     kv_pages: Optional[int] = None     # paged pool budget (paged only)
     kv_host_pages: Optional[int] = None  # host swap-pool budget (c_cpu)
     parked: Optional[int] = None       # requests swapped out right now
+    prefix_pages: Optional[int] = None   # prefix-cache device-page cap
+    prefix_hit_tokens: Optional[int] = None  # cumulative cached tokens
 
 
 class RagdollEngine:
@@ -277,7 +279,7 @@ class RagdollEngine:
             # placement's gen_batch; paged generators also retarget their
             # KV page budget from the placement's accelerator KV share
             # (retarget clamps it to the block-table-addressable range)
-            pages = host_pages = None
+            pages = host_pages = prefix_pages = None
             if getattr(self.generator, "paged", False):
                 pages = self.opt.kv_page_budget(
                     placement, self.generator.page_size)
@@ -285,9 +287,16 @@ class RagdollEngine:
                 # that demotes KV to the host grows preemption headroom
                 host_pages = self.opt.kv_host_page_budget(
                     placement, self.generator.page_size)
-            applied = self.generator.retarget(num_slots=b,
-                                              page_budget=pages,
-                                              host_page_budget=host_pages)
+                # arbitrate device pages between live KV and the radix
+                # prefix cache: the cache's share is a cap *inside* the
+                # pool budget, enforced by LRU demotion to the host tier
+                if getattr(self.generator, "prefix", None) is not None:
+                    prefix_pages = self.opt.prefix_cache_page_budget(
+                        placement, self.generator.page_size)
+            applied = self.generator.retarget(
+                num_slots=b, page_budget=pages,
+                host_page_budget=host_pages,
+                prefix_page_budget=prefix_pages)
         else:
             applied = {}
         # couple the partition streamer's lookahead to the host memory the
@@ -310,7 +319,10 @@ class RagdollEngine:
             gen_slots=applied.get("slots"),
             kv_pages=applied.get("pages"),
             kv_host_pages=applied.get("host_pages"),
-            parked=getattr(self.generator, "parked_slots", None)))
+            parked=getattr(self.generator, "parked_slots", None),
+            prefix_pages=applied.get("prefix_pages"),
+            prefix_hit_tokens=getattr(self.generator, "prefix_hit_tokens",
+                                      None)))
 
     # ------------------------------------------------------------- public
     def pump_once(self) -> int:

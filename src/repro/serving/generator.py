@@ -49,6 +49,7 @@ from repro.core.prefetch import PrefetchPolicy, StreamedExecutor
 from repro.models.model import Model, init_cache
 from repro.serving import kvpool
 from repro.serving.kvpool import PagedKVCache
+from repro.serving.prefixcache import PrefixCache
 
 
 class HashTokenizer:
@@ -336,6 +337,20 @@ class ContinuousGenerator(_GeneratorBase):
       per ``step`` interleaved with live decode (chunked prefill), so
       long contexts no longer stall the batch.
 
+    Paged mode additionally supports **prefix sharing**
+    (``prefix_cache=True``): a radix tree over prompt tokens
+    (:class:`~repro.serving.prefixcache.PrefixCache`) remembers the KV
+    pages of completed prefills, and a joining prompt that matches a
+    cached prefix maps those pages straight into its block table at
+    refcount+1 and prefills only the novel suffix — TTFT work drops
+    from ``ctx_len`` to ``ctx_len - matched`` tokens.  Shared pages are
+    read-only: the partially-matched boundary page is copied at join
+    time, and a decode write landing in a still-shared page (a donor's
+    cached tail) is detached copy-on-write by ``_cow_barrier`` before
+    the step runs.  Cold cached prefixes demote to the host swap tier
+    and revive on the next hit; the engine arbitrates device pages
+    between live KV and the cache via ``retarget(prefix_page_budget=)``.
+
     Paged mode additionally supports **page-granular preemption**
     (swap-to-host): ``preempt(ref)`` parks a live slot by DMA-ing its
     pages into the :class:`~repro.serving.kvpool.HostPagePool` and
@@ -357,7 +372,9 @@ class ContinuousGenerator(_GeneratorBase):
                  paged: bool = False, page_size: int = 8,
                  page_budget: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 host_page_budget: Optional[int] = None):
+                 host_page_budget: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 prefix_page_budget: Optional[int] = None):
         super().__init__(cfg, params, gen_cfg, streamed=streamed,
                          policy=policy)
         self.num_slots = num_slots
@@ -368,7 +385,17 @@ class ContinuousGenerator(_GeneratorBase):
         self.page_size = page_size
         if prefill_chunk is not None and not paged:
             raise ValueError("prefill_chunk requires paged=True")
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache requires paged=True")
         self.prefill_chunk = prefill_chunk
+        self.prefix: Optional[PrefixCache] = (
+            PrefixCache(page_size, prefix_page_budget) if prefix_cache
+            else None)
+        # prefill/sharing accounting (deterministic; fig8 asserts on these)
+        self.joins = 0
+        self.prefill_tokens = 0       # prompt tokens actually prefilled
+        self.prefix_hit_tokens = 0    # prompt tokens served from the cache
+        self.cow_copies = 0
         self._prefilling: Dict[int, _ChunkJob] = {}
         self._parked: Dict[Any, _Parked] = {}
         self.swap_outs = 0
@@ -415,11 +442,31 @@ class ContinuousGenerator(_GeneratorBase):
 
     @property
     def admit_capacity(self) -> int:
-        """Joins guaranteed to succeed right now (slots AND pages)."""
+        """Joins guaranteed to succeed right now (slots AND pages).
+
+        With a prefix cache, pages the cache could surrender (refcount
+        1, evictable by ``PrefixCache.reclaim``) count as available —
+        ``join`` reclaims them on demand, so they never block admission.
+        """
         if not self.paged:
             return self.table.free_slots
         worst = self.gen_cfg.ctx_len + self.gen_cfg.max_new_tokens
-        return min(self.table.free_slots, self.kv.admit_capacity(worst))
+        cap = self.kv.admit_capacity(worst)
+        if self.prefix is not None and cap == 0:
+            spare = (self.kv.pool.available_pages
+                     + self.prefix.evictable_pages(self.kv))
+            cap = spare // max(1, self.kv.pool.blocks_for(worst))
+        return min(self.table.free_slots, cap)
+
+    def _pools(self):
+        """The pooled cache pytree (layout depends on the executor)."""
+        return self.caches if self.streamed else self.cache
+
+    def _set_pools(self, pools) -> None:
+        if self.streamed:
+            self.caches = pools
+        else:
+            self.cache = pools
 
     def _scatter_row(self, row_cache, slot: int) -> None:
         """Overwrite slot ``slot``'s KV row with a batch=1 cache."""
@@ -472,6 +519,15 @@ class ContinuousGenerator(_GeneratorBase):
         With chunked prefill the slot is leased immediately but the
         first token only appears after the last chunk lands (the chunks
         ride subsequent ``step`` calls, interleaved with live decode).
+
+        With ``prefix_cache=True`` the prompt's tokens are first walked
+        against the radix cache: matched full pages map into the block
+        table shared (refcount+1, read-only), a partially-matched
+        boundary page is copied into a private page, and only the
+        ``ctx_len - matched`` suffix tokens are prefilled — capped at
+        ``ctx_len - 1`` matched so the suffix prefill always emits the
+        first token's logits.  Tokens are identical to an uncached join
+        (``tests/test_prefix.py``).
         """
         g = self.gen_cfg
         req = g.max_new_tokens if max_new_tokens is None else max_new_tokens
@@ -480,20 +536,49 @@ class ContinuousGenerator(_GeneratorBase):
         ref = self.table.acquire(key, pos=g.ctx_len, remaining=budget)
         if ref is None:
             return None
-        if self.paged and not self.kv.admit(ref.index, g.ctx_len + budget):
-            self.table.release(ref)         # page backpressure
-            return None
+        ptoks = self.tok.encode(prompt, g.ctx_len)
+        matched = 0
+        if self.paged:
+            if self.prefix is not None:
+                m = self._admit_shared(ref, ptoks, g.ctx_len + budget)
+                if m is None:
+                    self.table.release(ref)     # page backpressure
+                    return None
+                matched = m
+            elif not self.kv.admit(ref.index, g.ctx_len + budget):
+                self.table.release(ref)         # page backpressure
+                return None
+        self.joins += 1
+        self.prefill_tokens += g.ctx_len - matched
         self.peak_in_flight = max(self.peak_in_flight, self.in_flight)
         if self.prefill_chunk is not None:
             # park decode writes on the last position: its page is either
             # unallocated (-> trash) or self-overwritten by the final
-            # decode step before it is ever read
+            # decode step before it is ever read.  A prefix hit starts
+            # the job at the matched offset — only the suffix chunks run.
             self._prefilling[ref.index] = _ChunkJob(
-                ref=ref, toks=self.tok.encode(prompt, g.ctx_len))
+                ref=ref, toks=ptoks, offset=matched)
             self._cur[ref.index] = 0
             self._pos[ref.index] = self._total - 1
             return ref
-        toks = jnp.asarray(self.tok.encode(prompt, g.ctx_len)[None])
+        if matched > 0:
+            # suffix-only prefill through the block table (the shared
+            # prefix pages supply positions [0, matched) to attention)
+            self.kv.ensure(ref.index, g.ctx_len)
+            chunk = jnp.asarray(ptoks[None, matched:])
+            off = jnp.full((1,), matched, jnp.int32)
+            bt = self.kv.slot_tab(ref.index)
+            if self.streamed:
+                logits, self.caches = self.exec.prefill_chunk(
+                    chunk, self.caches, off, block_tab=bt,
+                    kv_span=g.ctx_len)
+            else:
+                logits, self.cache = self._chunk_paged(
+                    self.params, chunk, self.cache, off, bt)
+            self._prefix_insert(ref.index, ptoks)
+            self._emit(ref, int(np.asarray(jnp.argmax(logits, -1))[0]))
+            return ref
+        toks = jnp.asarray(ptoks[None])
         if self.streamed:
             row = self.exec.init_caches(1, self._total, g.dtype)
             logits, row = self.exec.prefill(toks, row)
@@ -510,8 +595,101 @@ class ContinuousGenerator(_GeneratorBase):
                     self.cache, row, ref.index, g.ctx_len)
             else:
                 self._scatter_row(row, ref.index)
+        if self.paged:
+            self._prefix_insert(ref.index, ptoks)
         self._emit(ref, int(np.asarray(jnp.argmax(logits, axis=-1))[0]))
         return ref
+
+    # --------------------------------------------------- prefix sharing
+    def _admit_shared(self, ref: SlotRef, toks: np.ndarray,
+                      length: int) -> Optional[int]:
+        """Prefix-aware admission: match, map shared pages, copy the
+        boundary page.  Returns matched token count (0 = miss), or
+        ``None`` on page backpressure (nothing retained).
+
+        The match pins every returned node (refcount+1), so an eviction
+        pass triggered between here and the admit below can never free
+        a matched page.  Full-page pins transfer to the joiner's block
+        table; the boundary pin is dropped after its page is copied.
+        """
+        g = self.gen_cfg
+        pools = self._pools()
+        nodes, m, pools = self.prefix.match(toks, self.kv, pools)
+        # cap: the suffix prefill must cover >= 1 token, because it is
+        # what emits the request's first output token
+        m = min(m, g.ctx_len - 1)
+        f, t = divmod(m, self.page_size)
+        shared = [n.page for n in nodes[:f]]
+        ok = self.kv.admit(ref.index, length, shared=shared)
+        if not ok:
+            # evict cold cached pages to fund the reservation, retry once
+            short = (self.kv.pool.blocks_for(length) - f
+                     - self.kv.pool.available_pages)
+            if short > 0:
+                _, pools = self.prefix.reclaim(short, self.kv, pools)
+                ok = self.kv.admit(ref.index, length, shared=shared)
+        if not ok:
+            self.prefix.unpin(nodes, self.kv)
+            self._set_pools(pools)
+            return None
+        if t > 0:
+            # the partially-matched boundary page becomes a private copy
+            # (the suffix prefill will overwrite its tail in place)
+            self.kv.ensure(ref.index, m)
+            dst = self.kv.pool.table(ref.index)[f]
+            pools = self.kv.copy_page(pools, nodes[f].page, dst)
+        self.prefix.unpin(nodes[f:], self.kv)
+        self._set_pools(pools)
+        if m > 0:
+            self.prefix.stats.hits += 1
+            self.prefix.stats.hit_tokens += m
+            self.prefix_hit_tokens += m
+        else:
+            self.prefix.stats.misses += 1
+        return m
+
+    def _prefix_insert(self, slot: int, toks: np.ndarray) -> None:
+        """Cache a freshly prefilled prompt's pages (refcount+1 each).
+
+        Called once per completed prefill, *before* the first ``_emit``
+        — so a budget-1 request that finishes immediately still donates
+        its prefix (the cache's references keep the pages alive past the
+        slot's release).
+        """
+        if self.prefix is None:
+            return
+        blocks = self.kv.pool.blocks_for(self.gen_cfg.ctx_len)
+        pages = self.kv.pool.table(slot)[:blocks]
+        self._set_pools(
+            self.prefix.insert(toks, pages, self.kv, self._pools()))
+
+    def _cow_barrier(self, refs: List[SlotRef]) -> None:
+        """Detach shared pages that this step's decode will write.
+
+        A slot's pending write lands at ``_pos`` — if that block is
+        still shared (a donor's cached tail page), copy it out first
+        (copy-on-write).  When no spare page can fund the copy, the
+        fallback un-caches the page instead: the prefix cache is the
+        only other holder, so dropping its reference makes the page
+        private and the write may proceed in place.
+        """
+        pools = self._pools()
+        changed = False
+        for ref in refs:
+            blk = int(self._pos[ref.index]) // self.page_size
+            tab = self.kv.pool.table(ref.index)
+            if blk >= len(tab) or self.kv.pool.refcount(tab[blk]) <= 1:
+                continue
+            try:
+                pools, copied = self.kv.cow_block(pools, ref.index, blk)
+                if copied:
+                    self.cow_copies += 1
+                    changed = True
+            except kvpool.PageExhausted:
+                if not self.prefix.drop_page(tab[blk], self.kv):
+                    raise
+        if changed:
+            self._set_pools(pools)
 
     def _advance_prefills(self) -> int:
         """Prefill one chunk for every joining slot (paged mode only).
@@ -575,6 +753,7 @@ class ContinuousGenerator(_GeneratorBase):
         progressed = len(self._prefilling)
         for slot, token in finished:
             job = self._prefilling.pop(slot)
+            self._prefix_insert(slot, job.toks)  # donate before any release
             self._emit(job.ref, token)      # first token, as full prefill
         return progressed
 
@@ -594,6 +773,10 @@ class ContinuousGenerator(_GeneratorBase):
                 self.steps += 1
             return progressed
         if self.paged:
+            if self.prefix is not None:
+                # copy-on-write: detach any still-shared page this
+                # step's decode writes would land in (donor tail pages)
+                self._cow_barrier(refs)
             # allocate the page each live slot's pending write needs
             for ref in refs:
                 self.kv.ensure(ref.index, int(self._pos[ref.index]) + 1)
@@ -738,14 +921,20 @@ class ContinuousGenerator(_GeneratorBase):
         return actual
 
     def set_page_budget(self, pages: int) -> int:
-        """Retarget the paged pool's usable-page budget (paged only)."""
+        """Retarget the paged pool's usable-page budget (paged only).
+
+        A shrink first evicts cold cached prefix pages (LRU demotion to
+        the host tier) so the cache never blocks the pool from meeting
+        the placement's smaller device share.
+        """
         assert self.paged, "set_page_budget requires paged=True"
-        pools = self.caches if self.streamed else self.cache
+        pools = self._pools()
+        if self.prefix is not None:
+            over = self.kv.pool.referenced_pages - pages
+            if over > 0:
+                _, pools = self.prefix.reclaim(over, self.kv, pools)
         pools, actual = self.kv.resize_pages(pools, pages)
-        if self.streamed:
-            self.caches = pools
-        else:
-            self.cache = pools
+        self._set_pools(pools)
         return actual
 
     def set_host_page_budget(self, pages: int) -> int:
@@ -755,7 +944,9 @@ class ContinuousGenerator(_GeneratorBase):
 
     def retarget(self, num_slots: Optional[int] = None,
                  page_budget: Optional[int] = None,
-                 host_page_budget: Optional[int] = None) -> Dict[str, int]:
+                 host_page_budget: Optional[int] = None,
+                 prefix_page_budget: Optional[int] = None
+                 ) -> Dict[str, int]:
         """Policy-boundary hook: apply the live placement's capacity.
 
         The page budget is clamped to what the block tables can address
@@ -764,7 +955,10 @@ class ContinuousGenerator(_GeneratorBase):
         (``nmax`` pages) so the pool can never starve admission.  The
         host budget (the placement's ``c_cpu`` KV share) is capped at
         parking every slot worst-case (``num_slots * nmax``); a zero
-        budget legitimately disables preemption.
+        budget legitimately disables preemption.  The prefix-cache
+        budget caps how many *device* pages the radix cache may hold —
+        the placement's arbitration between live KV and cached prefixes
+        — enforced immediately by LRU demotion to the host tier.
         """
         out: Dict[str, int] = {}
         if num_slots is not None:
@@ -776,6 +970,12 @@ class ContinuousGenerator(_GeneratorBase):
         if host_page_budget is not None and self.paged:
             budget = min(host_page_budget, self.num_slots * self.kv.nmax)
             out["host_pages"] = self.set_host_page_budget(budget)
+        if (prefix_page_budget is not None and self.paged
+                and self.prefix is not None):
+            budget = max(0, min(prefix_page_budget, self.kv.pool.capacity))
+            self.prefix.budget = budget
+            self._set_pools(self.prefix.enforce(self.kv, self._pools()))
+            out["prefix_pages"] = budget
         return out
 
     def harvest(self) -> List[Tuple[Any, str, List[int]]]:

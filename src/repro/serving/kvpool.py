@@ -20,6 +20,21 @@ vLLM-style paging:
     ceil(written_len / page_size)`` exactly, and reservations are always
     backed by free pages.
 
+    Pages carry **refcounts** so one physical page can back the same
+    logical prefix in many block tables (prefix-sharing KV, see
+    ``serving/prefixcache.py``): ``admit(..., shared=pages)`` maps an
+    already-referenced prefix into a joining slot's table, ``incref``/
+    ``decref`` adjust standalone holds (the radix prefix cache holds one
+    reference per cached page), and a page only returns to the free
+    list when its count hits zero.  Shared pages are **read-only**:
+    a holder that must write one first detaches it with ``cow`` —
+    allocate a fresh page, repoint the block-table entry, drop one
+    reference on the original (copy-on-write; the device-side data copy
+    is the caller's job, see ``PagedKVCache.cow_block``).  The
+    conservation law — every page's refcount equals its block-table
+    occurrences plus its standalone holds, and ``free ∩ referenced =
+    ∅`` — is property-tested in ``tests/test_prefix.py``.
+
 ``PagedKVCache``
     The device-facing half: builds pooled KV arrays where every dense
     cache leaf ``(B, S, kv_heads, head_dim)`` becomes
@@ -98,6 +113,9 @@ class PagePool:
         self._free: List[int] = list(range(capacity, 0, -1))  # pop() -> 1
         self._tables: Dict[Any, List[int]] = {}
         self._reserved: Dict[Any, int] = {}
+        # page id -> reference count.  An allocated page starts at 1
+        # (its table entry / standalone hold); free pages have no entry.
+        self._refs: Dict[int, int] = {}
 
     # ------------------------------------------------------------ queries
     @property
@@ -120,6 +138,15 @@ class PagePool:
     def available_pages(self) -> int:
         """Free pages not backing any slot's reservation."""
         return self.free_pages - self.reserved_pages
+
+    @property
+    def referenced_pages(self) -> int:
+        """Distinct pages with refcount >= 1 (free + referenced = capacity)."""
+        return len(self._refs)
+
+    def refcount(self, page: int) -> int:
+        """Live references to ``page`` (0 = free / never allocated)."""
+        return self._refs.get(page, 0)
 
     def blocks_for(self, length: int) -> int:
         return -(-max(length, 0) // self.page_size)
@@ -145,14 +172,28 @@ class PagePool:
         return self.available_pages // need
 
     # ---------------------------------------------------------- lifecycle
-    def admit(self, key: Any, length: int) -> bool:
-        """Reserve ``blocks_for(length)`` pages for a joining request."""
+    def admit(self, key: Any, length: int,
+              shared: Sequence[int] = ()) -> bool:
+        """Reserve ``blocks_for(length)`` pages for a joining request.
+
+        ``shared`` maps an already-referenced page run (a cached prefix)
+        into the head of the new block table: the caller must hold one
+        reference per page (a pin from ``PrefixCache.match``), and that
+        reference transfers to the table entry — no incref here, and
+        ``release`` later decrefs it like any other entry.  Only the
+        blocks *beyond* the shared prefix are reserved, so a prefix-hit
+        join costs ``blocks_for(length) - len(shared)`` pages of
+        worst-case headroom instead of the full run.
+        """
         if key in self._tables:
             raise ValueError(f"slot {key!r} already holds pages")
-        need = self.blocks_for(length)
+        for p in shared:
+            if self._refs.get(p, 0) < 1:
+                raise ValueError(f"shared page {p} is not referenced")
+        need = max(0, self.blocks_for(length) - len(shared))
         if need > self.available_pages:
             return False
-        self._tables[key] = []
+        self._tables[key] = list(shared)
         self._reserved[key] = need
         return True
 
@@ -174,16 +215,80 @@ class PagePool:
                 f"need {need} pages for slot {key!r}, "
                 f"reservation {res} + available {self.available_pages}")
         new = [self._free.pop() for _ in range(need)]
+        for p in new:
+            self._refs[p] = 1
         tab.extend(new)
         self._reserved[key] = max(0, res - need)
         return new
 
     def release(self, key: Any) -> int:
-        """Free every page (and reservation) held by ``key``."""
+        """End ``key``'s lease: drop one reference per table entry (and
+        the unspent reservation).  Pages shared with other tables or the
+        prefix cache survive — only refcount-zero pages return to the
+        free list, so a page is never freed while shared."""
         tab = self._tables.pop(key)       # KeyError = double free
         self._reserved.pop(key, None)
-        self._free.extend(reversed(tab))  # low ids pop first again
+        for p in reversed(tab):           # low ids pop first again
+            self.decref(p)
         return len(tab)
+
+    # ----------------------------------------------- sharing (prefix cache)
+    def incref(self, page: int) -> None:
+        """Add a standalone reference to an allocated page (the prefix
+        cache's hold, or a match-time pin)."""
+        if page not in self._refs:
+            raise ValueError(f"page {page} is not allocated")
+        self._refs[page] += 1
+
+    def decref(self, page: int) -> None:
+        """Drop one reference; the page frees when the count hits zero."""
+        rc = self._refs[page] - 1         # KeyError = double free
+        if rc <= 0:
+            del self._refs[page]
+            self._free.append(page)
+        else:
+            self._refs[page] = rc
+
+    def grab(self, n: int = 1) -> Optional[List[int]]:
+        """Allocate ``n`` standalone pages (refcount 1, no table) from
+        the unreserved spares — the prefix cache's own allocations
+        (cached tail copies, host-tier revivals).  ``None`` when the
+        spares cannot cover it; never touches slot reservations."""
+        if n < 0:
+            raise ValueError("n must be >= 0")
+        if n > self.available_pages:
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        for p in got:
+            self._refs[p] = 1
+        return got
+
+    def cow(self, key: Any, block: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write detach of ``key``'s ``block`` before a write.
+
+        A shared page (refcount > 1) is read-only for every holder; the
+        writer swaps in a fresh page and drops its reference on the
+        original.  Returns ``(src, dst)`` so the caller can copy the
+        page *data* device-side (``PagedKVCache.cow_block``), or
+        ``None`` when the page is already private (refcount 1 — no copy
+        needed).  Draws from unreserved spares only: the slot's own
+        reservation covers its private blocks, never a detach, so a
+        CoW can raise :class:`PageExhausted` — callers fall back to
+        un-caching the page instead (see
+        ``ContinuousGenerator._cow_barrier``).
+        """
+        tab = self._tables[key]
+        src = tab[block]
+        if self._refs.get(src, 0) <= 1:
+            return None
+        if self.available_pages < 1:
+            raise PageExhausted(
+                f"no spare page to detach shared page {src} for {key!r}")
+        dst = self._free.pop()
+        self._refs[dst] = 1
+        tab[block] = dst
+        self.decref(src)
+        return src, dst
 
     # --------------------------------------------------------------- swap
     def swap_out(self, key: Any) -> Tuple[List[int], int]:
@@ -194,10 +299,13 @@ class PagePool:
         the unspent worst-case reservation the slot must re-book on
         swap-in.  The freed pages are re-issuable *immediately* — the
         swapped-out data's integrity lives host-side from here on.
+        Shared pages (a mapped cached prefix) merely lose this slot's
+        reference; the cache and other holders keep reading them.
         """
         tab = self._tables.pop(key)       # KeyError = not a holder
         res = self._reserved.pop(key, 0)
-        self._free.extend(reversed(tab))
+        for p in reversed(tab):
+            self.decref(p)
         return list(tab), res
 
     def swap_in(self, key: Any, blocks: int,
@@ -218,6 +326,8 @@ class PagePool:
         if blocks + reserve > self.available_pages:
             return None
         new = [self._free.pop() for _ in range(blocks)]
+        for p in new:
+            self._refs[p] = 1
         self._tables[key] = new
         self._reserved[key] = reserve
         return new
@@ -235,8 +345,7 @@ class PagePool:
             self._free.extend(range(self._capacity + 1, target + 1))
             self._capacity = target
             return self._capacity
-        in_use_max = max((p for t in self._tables.values() for p in t),
-                        default=0)
+        in_use_max = max(self._refs, default=0)   # tables + cache holds
         floor = max(target, in_use_max)
         budget = self.free_pages - self.reserved_pages
         free_set = set(self._free)
@@ -554,8 +663,17 @@ class PagedKVCache:
             self._tab_dev = None
 
     # ----------------------------------------------------------- lifecycle
-    def admit(self, slot: int, length: int) -> bool:
-        return self.pool.admit(slot, length)
+    def admit(self, slot: int, length: int,
+              shared: Sequence[int] = ()) -> bool:
+        """Book ``slot``'s worst-case reservation; with ``shared`` the
+        caller's pinned prefix pages become the head of the block table
+        (refs transfer, see ``PagePool.admit``)."""
+        if not self.pool.admit(slot, length, shared=shared):
+            return False
+        if shared:
+            self._tab[slot, :len(shared)] = list(shared)
+            self._tab_dev = None
+        return True
 
     def ensure(self, slot: int, length: int) -> None:
         self._sync(slot, self.pool.ensure(slot, length))
@@ -567,6 +685,33 @@ class PagedKVCache:
 
     def admit_capacity(self, length: int) -> int:
         return self.pool.admit_capacity(length)
+
+    # ------------------------------------------------- sharing (CoW pages)
+    def copy_page(self, pools, src: int, dst: int):
+        """Device-side whole-page copy ``src -> dst`` in every pool leaf
+        (the data half of copy-on-write); returns the updated pools."""
+        new_leaves = []
+        for leaf, axis in _pool_leaves(pools):
+            if axis == 1:
+                new_leaves.append(leaf.at[:, dst].set(leaf[:, src]))
+            else:
+                new_leaves.append(leaf.at[dst].set(leaf[src]))
+        return _rebuild_pools(pools, new_leaves)
+
+    def cow_block(self, pools, slot: int, block: int):
+        """Detach ``slot``'s ``block`` if shared: fresh physical page,
+        data copied, block-table entry repointed.  Returns
+        ``(pools, copied)`` — ``copied`` False when the page was already
+        private.  May raise :class:`PageExhausted` (spares-only draw,
+        see ``PagePool.cow``)."""
+        res = self.pool.cow(slot, block)
+        if res is None:
+            return pools, False
+        src, dst = res
+        pools = self.copy_page(pools, src, dst)
+        self._tab[slot, block] = dst
+        self._tab_dev = None
+        return pools, True
 
     # ------------------------------------------------------ swap-to-host
     def can_swap_out(self, slot: int) -> bool:

@@ -1,0 +1,333 @@
+"""Radix prefix cache: share identical prompt prefixes across joins.
+
+At production traffic most RAG requests repeat prefixes — the system
+prompt and, RAG-specifically, the same retrieved chunks recurring across
+queries (RAGO calls document-prefix caching one of the main scheduling
+levers in RAG serving).  This module keeps the KV pages of recently
+prefilled prompts in a radix tree keyed by token content, so a joining
+request maps the longest cached prefix straight into its block table
+(``PagePool.admit(shared=...)``, refcount+1 per page) and prefills only
+the novel suffix.
+
+Structure
+    One :class:`RadixNode` per KV **page**: interior/full nodes carry
+    exactly ``page_size`` tokens; a *tail* node (fewer tokens, always a
+    leaf) caches a prompt's final partial page.  ``match`` walks exact
+    full-page edges and finishes with a longest-common-prefix match
+    against the divergence node, so hits are not limited to page
+    granularity — a partially matched page is shared too, copied at
+    join time (copy-on-write) before the suffix prefill overwrites its
+    divergent half.
+
+Ownership
+    The cache holds **one refcount** on every cached device page
+    (``PagePool.incref``).  Live slots mapping a page hold further
+    references, and ``match`` *pins* every node it returns (+1) so a
+    concurrent eviction pass can never reclaim a page between the match
+    and the join that maps it — eviction only ever touches pages whose
+    count is exactly 1 (cache-only).
+
+Eviction
+    LRU over unpinned nodes, unified with the PR 4 swap tier: a victim
+    page *demotes* to the :class:`~repro.serving.kvpool.HostPagePool`
+    (whole-page D2H, device page freed) instead of dying, and the next
+    ``match`` that walks through the node revives it onto a fresh
+    device page (H2D).  Only when the host tier is full does a leaf
+    subtree drop for real.  The engine retargets the cache's device
+    budget from the live placement
+    (``PlacementOptimizer.prefix_cache_page_budget``) at every policy
+    boundary, so device bytes are arbitrated between live KV pages and
+    cached prefixes.
+
+Token-identity contract: prefix-hit joins are token-identical to
+uncached whole-batch prefill on both executor paths, including CoW
+divergence and preempt/resume of slots holding shared pages
+(``tests/test_prefix.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class PrefixCacheStats:
+    hits: int = 0              # joins that matched a non-empty prefix
+    misses: int = 0
+    hit_tokens: int = 0        # prompt tokens served from cached pages
+    inserted_pages: int = 0
+    demoted_pages: int = 0     # device -> host (swap tier)
+    revived_pages: int = 0     # host -> device on a later hit
+    dropped_pages: int = 0     # evicted for real (host tier full)
+
+
+class RadixNode:
+    """One cached KV page: ``key`` tokens, a device page id or a parked
+    host residency, LRU timestamp, and the child edges keyed by their
+    token tuples."""
+    __slots__ = ("key", "page", "on_host", "children", "parent",
+                 "last_used")
+
+    def __init__(self, key: Tuple[int, ...],
+                 parent: Optional["RadixNode"]):
+        self.key = key
+        self.page: Optional[int] = None
+        self.on_host = False
+        self.children: Dict[Tuple[int, ...], "RadixNode"] = {}
+        self.parent = parent
+        self.last_used = 0
+
+    def __repr__(self) -> str:       # debugging aid only
+        where = "host" if self.on_host else f"page={self.page}"
+        return f"RadixNode(len={len(self.key)}, {where})"
+
+
+def _lcp(a: Sequence[int], b: Sequence[int]) -> int:
+    n = min(len(a), len(b))
+    for i in range(n):
+        if a[i] != b[i]:
+            return i
+    return n
+
+
+class PrefixCache:
+    """Radix tree of cached prompt-prefix KV pages (one node per page).
+
+    All methods that move page *data* (revival, demotion) take the
+    generator's pools pytree and return the updated one — the cache owns
+    bookkeeping only, the arrays stay with the generator so jit donation
+    keeps working (same split as :class:`~repro.serving.kvpool.PagedKVCache`).
+    """
+
+    def __init__(self, page_size: int,
+                 device_page_budget: Optional[int] = None):
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.page_size = page_size
+        # None = bounded only by the pool itself; the engine's policy
+        # boundary retargets this from the live placement
+        self.budget = device_page_budget
+        self.root = RadixNode((), None)
+        self.stats = PrefixCacheStats()
+        self._clock = 0
+
+    # ------------------------------------------------------------ queries
+    def _nodes(self) -> List[RadixNode]:
+        out, stack = [], list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            stack.extend(n.children.values())
+        return out
+
+    @property
+    def device_pages(self) -> int:
+        """Cached pages currently resident in the device pool."""
+        return sum(1 for n in self._nodes() if n.page is not None)
+
+    @property
+    def host_pages(self) -> int:
+        return sum(1 for n in self._nodes() if n.on_host)
+
+    def evictable_pages(self, kv) -> int:
+        """Device pages ``reclaim`` could free right now (refcount 1)."""
+        return len(self._evictable(kv))
+
+    # -------------------------------------------------------------- match
+    def match(self, toks: Sequence[int], kv, pools):
+        """Longest cached prefix of ``toks``: pinned nodes + total match.
+
+        Returns ``(nodes, matched, pools)``.  ``nodes`` is the page
+        chain in logical order — exact full-page matches plus at most
+        one final partially-matched node — each **pinned** (refcount+1
+        on its device page) and device-resident: host-parked nodes on
+        the path are revived (fresh device page + H2D load) as the walk
+        reaches them; a revival the pool cannot fund ends the match
+        early.  The caller owns the pins: full-page shares transfer
+        them to the joiner's block table via ``admit(shared=...)``, the
+        partial node is copied then unpinned (``unpin``).
+        """
+        self._clock += 1
+        toks = [int(t) for t in np.asarray(toks).tolist()]
+        nodes: List[RadixNode] = []
+        matched = 0
+        node = self.root
+        while matched < len(toks):
+            rem = toks[matched:]
+            child = None
+            if len(rem) >= self.page_size:
+                child = node.children.get(tuple(rem[:self.page_size]))
+            take = self.page_size
+            if child is None:
+                # divergence: share the child with the longest common
+                # prefix (partial page, CoW-copied by the joiner)
+                best, best_lcp = None, 0
+                for key, c in node.children.items():
+                    l = _lcp(key, rem)
+                    if l > best_lcp:
+                        best, best_lcp = c, l
+                if best is None:
+                    break
+                child, take = best, best_lcp
+            pools, ok = self._pin(child, kv, pools)
+            if not ok:
+                break
+            child.last_used = self._clock
+            nodes.append(child)
+            matched += take
+            if take < self.page_size:
+                break                       # partial match ends the chain
+            node = child
+        return nodes, matched, pools
+
+    def _pin(self, node: RadixNode, kv, pools):
+        """Make ``node`` device-resident and add one reference."""
+        if node.on_host:
+            got = kv.pool.grab(1)
+            if got is None:                 # spares exhausted: demote the
+                freed, pools = self.reclaim(1, kv, pools)   # coldest page
+                got = kv.pool.grab(1) if freed else None
+            if got is None:
+                return pools, False
+            pools = kv.host.load(pools, node, got)
+            kv.host.release(node)
+            node.page, node.on_host = got[0], False
+            self.stats.revived_pages += 1
+        kv.pool.incref(node.page)
+        return pools, True
+
+    def unpin(self, nodes: Sequence[RadixNode], kv) -> None:
+        """Drop match-time pins that did not transfer to a block table."""
+        for n in nodes:
+            kv.pool.decref(n.page)
+
+    # ------------------------------------------------------------- insert
+    def insert(self, toks: Sequence[int], pages: Sequence[int], kv,
+               pools):
+        """Register a fully prefilled prompt's pages; returns pools.
+
+        ``pages`` is the slot's block-table run covering the prompt.
+        Missing nodes are created *sharing* the slot's pages
+        (refcount+1 — the cache's hold); blocks already cached are left
+        alone.  The final partial page (``len(toks) % page_size != 0``)
+        is shared too: the donor's first decode step past the shared
+        boundary detaches it by CoW (``ContinuousGenerator._cow_barrier``),
+        leaving the cache's copy pristine.  Ends by enforcing the device
+        budget (LRU demotion), so an insert can never leave the cache
+        over its placement share.
+        """
+        self._clock += 1
+        toks = [int(t) for t in np.asarray(toks).tolist()]
+        node = self.root
+        for b, page in enumerate(pages):
+            seg = tuple(toks[b * self.page_size:
+                             (b + 1) * self.page_size])
+            if not seg:
+                break
+            child = node.children.get(seg)
+            if child is None:
+                child = RadixNode(seg, node)
+                child.page = page
+                kv.pool.incref(page)
+                node.children[seg] = child
+                self.stats.inserted_pages += 1
+            child.last_used = self._clock
+            if len(seg) < self.page_size:
+                break                        # tail nodes are leaves
+            node = child
+        return self.enforce(kv, pools)
+
+    # ----------------------------------------------------------- eviction
+    def _evictable(self, kv) -> List[RadixNode]:
+        """Device-resident nodes only the cache references (LRU order)."""
+        out = [n for n in self._nodes()
+               if n.page is not None and kv.pool.refcount(n.page) == 1]
+        out.sort(key=lambda n: n.last_used)
+        return out
+
+    def _subtree(self, node: RadixNode) -> List[RadixNode]:
+        out, stack = [], [node]
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            stack.extend(n.children.values())
+        return out
+
+    def _drop(self, node: RadixNode, kv) -> int:
+        """Hard-drop ``node``'s whole subtree (device + host refs)."""
+        freed = 0
+        for n in self._subtree(node):
+            if n.page is not None:
+                kv.pool.decref(n.page)
+                freed += 1
+            elif n.on_host:
+                kv.host.release(n)
+            n.children.clear()
+            self.stats.dropped_pages += 1
+        node.parent.children.pop(node.key, None)
+        node.parent = None
+        return freed
+
+    def _demote_or_drop(self, node: RadixNode, kv, pools):
+        """Free one device page: park it host-side when the swap tier
+        has room (children stay, the chain revives on the next hit),
+        else drop a leaf subtree."""
+        if kv.host.acquire(node, 1, reserve=0) is not None:
+            kv.host.store(pools, node, [node.page])
+            kv.pool.decref(node.page)
+            node.page, node.on_host = None, True
+            self.stats.demoted_pages += 1
+            return 1, pools
+        # host tier full: only a fully-unpinned subtree may drop
+        sub = self._subtree(node)
+        if any(n.page is not None and kv.pool.refcount(n.page) > 1
+               for n in sub):
+            return 0, pools
+        return self._drop(node, kv), pools
+
+    def reclaim(self, n_pages: int, kv, pools):
+        """Free >= ``n_pages`` device pages by LRU demotion (drop only
+        when the host tier is full).  Pinned/mapped pages (refcount > 1)
+        are never touched — a join that just matched a node cannot race
+        its eviction.  Returns ``(freed, pools)``."""
+        freed = 0
+        while freed < n_pages:
+            cands = self._evictable(kv)
+            if not cands:
+                break
+            got = 0
+            for victim in cands:
+                got, pools = self._demote_or_drop(victim, kv, pools)
+                if got:
+                    break
+            if not got:
+                break
+            freed += got
+        return freed, pools
+
+    def drop_page(self, page: int, kv) -> bool:
+        """Un-cache the node holding ``page`` (no demotion): the CoW
+        fallback when a writer cannot fund a detach copy — dropping the
+        cache's reference makes the page private again, so the write
+        may proceed in place."""
+        for n in self._nodes():
+            if n.page == page:
+                self._drop(n, kv)
+                return True
+        return False
+
+    def enforce(self, kv, pools):
+        """Demote LRU pages until the device footprint fits the budget."""
+        if self.budget is not None:
+            over = self.device_pages - self.budget
+            if over > 0:
+                _, pools = self.reclaim(over, kv, pools)
+        return pools
+
+    def clear(self, kv, pools):
+        """Drop every cached page (device refs + host residencies)."""
+        for child in list(self.root.children.values()):
+            self._drop(child, kv)
+        return pools

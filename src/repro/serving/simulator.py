@@ -94,6 +94,15 @@ class SimConfig:
     # CostModel.retrieval_time); None defers to the cost model's own
     # retrieval_shards
     retrieval_shards: Optional[int] = None
+    # radix prefix cache (paged continuous mode): every request shares
+    # its leading ``shared_prefix_len`` prompt tokens (the RAG system
+    # prompt + recurring retrieved chunks).  The first prefill seeds the
+    # cache; later joiners reserve only the non-shared pages and pay
+    # ``prefill_time(cached_len=...)`` — the TTFT collapse of fig8's
+    # shared-prefix row.  The cache's own page holds count against the
+    # placement's device page budget (live KV vs cache arbitration).
+    prefix_cache: bool = False
+    shared_prefix_len: int = 0
 
 
 @dataclass
@@ -267,7 +276,14 @@ class ServingSimulator:
         pages, each direction costing ``CostModel.kv_swap_time`` of
         PCIe transfer on that step.  Parked slots resume FIFO once the
         join backlog clears — the fig8/fig9 swap-vs-backpressure
-        trade-off rows come from this model."""
+        trade-off rows come from this model.
+
+        With ``prefix_cache=True`` every request shares its leading
+        ``shared_prefix_len`` prompt tokens: the first prefill seeds the
+        radix cache (its shared pages stay booked against the device
+        budget), and every later joiner reserves only the non-shared
+        pages and pays a suffix-only prefill
+        (``CostModel.prefill_time(cached_len=...)``)."""
         s = self.sim
         n = len(reqs)
         ret_q: List[Request] = []
@@ -281,13 +297,22 @@ class ServingSimulator:
             heapq.heappush(ev, (r.arrival, seq, "arrive", r))
             seq += 1
         ret_busy = gen_running = False
-        active: List[List] = []          # [request, tokens_remaining]
+        # [request, tokens_remaining, pages_held, cached_len]
+        active: List[List] = []
         swapped: List[List] = []         # parked host-side, FIFO resume
         req_pages = -(-(s.in_len + s.out_len) // s.page_size)
+        # prefix sharing: full pages of the common prompt head live once
+        # (held by the radix cache); a hit joiner reserves only the rest
+        cached = (max(0, min(s.shared_prefix_len, s.in_len - 1))
+                  if s.prefix_cache else 0)
+        shared_pages = cached // s.page_size
+        hit_pages = req_pages - shared_pages
 
         def page_budget(p: Placement) -> int:
             # floor of one request so a tiny placement can still progress
-            return max(self.opt.kv_page_budget(p, s.page_size), req_pages)
+            # (plus the cache's holds, which are not reclaimable here)
+            floor = req_pages + (shared_pages if s.prefix_cache else 0)
+            return max(self.opt.kv_page_budget(p, s.page_size), floor)
 
         def host_budget(p: Placement) -> int:
             return (self.opt.kv_host_page_budget(p, s.page_size)
@@ -295,7 +320,7 @@ class ServingSimulator:
 
         cap = {"b": 1, "p": self._placement(1), "steps": 0,
                "pages": page_budget(self._placement(1)), "reserved": 0,
-               "host": host_budget(self._placement(1))}
+               "host": host_budget(self._placement(1)), "seeded": False}
         now = 0.0
 
         def start_ret(t):
@@ -323,31 +348,36 @@ class ServingSimulator:
             # admit arrivals into free slots (join at this step boundary);
             # paged mode also reserves KV pages — exhaustion preempts the
             # longest-remaining slot (swap) or defers the join
-            joiners, swaps = [], 0
+            joiners, swap_pages = [], 0
             while ctx_q and len(active) < cap["b"]:
-                if s.paged and cap["reserved"] + req_pages > cap["pages"]:
+                # a warm cache turns every arrival into a prefix hit:
+                # only the non-shared pages need reserving
+                c = cached if cap["seeded"] else 0
+                need = hit_pages if c else req_pages
+                if s.paged and cap["reserved"] + need > cap["pages"]:
                     if (s.swap and active
-                            and (len(swapped) + 1) * req_pages
+                            and sum(sl[2] for sl in swapped) + req_pages
                             <= cap["host"]):
                         victim = max(active, key=lambda sl: sl[1])
                         active.remove(victim)     # pages move host-side
                         swapped.append(victim)
-                        cap["reserved"] -= req_pages
-                        swaps += 1
+                        cap["reserved"] -= victim[2]
+                        swap_pages += victim[2]
                         continue
                     break                 # page exhaustion: backpressure
                 r = ctx_q.pop(0)
                 r.t_gen_start = t
-                joiners.append(r)
-                active.append([r, s.out_len])
+                joiners.append((r, c))
+                active.append([r, s.out_len, need if s.paged else 0, c])
                 if s.paged:
-                    cap["reserved"] += req_pages
+                    cap["reserved"] += need
             # parked slots swap back in FIFO once the join backlog clears
             while (swapped and not ctx_q and len(active) < cap["b"]
-                   and cap["reserved"] + req_pages <= cap["pages"]):
-                active.append(swapped.pop(0))
-                cap["reserved"] += req_pages
-                swaps += 1
+                   and cap["reserved"] + swapped[0][2] <= cap["pages"]):
+                slot = swapped.pop(0)
+                active.append(slot)
+                cap["reserved"] += slot[2]
+                swap_pages += slot[2]
             if not active:
                 gen_running = False
                 return
@@ -376,12 +406,24 @@ class ServingSimulator:
                 len(active), s.in_len + s.out_len // 2, p.w_gpu, p.c_gpu,
                 s.depth_decode, w_cpu=w_cpu)
             if joiners:     # the joining group's prefill rides this step
-                dur += self.cost.prefill_time(
-                    len(joiners), s.in_len, p.w_gpu, p.c_gpu,
-                    s.depth_prefill, w_cpu=w_cpu)
-            if swaps:       # whole-page DMA over PCIe rides it too
-                dur += swaps * self.cost.kv_swap_time(req_pages,
-                                                      s.page_size)
+                miss = sum(1 for _, c in joiners if c == 0)
+                hits = len(joiners) - miss
+                if miss:
+                    dur += self.cost.prefill_time(
+                        miss, s.in_len, p.w_gpu, p.c_gpu,
+                        s.depth_prefill, w_cpu=w_cpu)
+                if hits:    # suffix-only prefill for prefix-cache hits
+                    dur += self.cost.prefill_time(
+                        hits, s.in_len, p.w_gpu, p.c_gpu,
+                        s.depth_prefill, w_cpu=w_cpu, cached_len=cached)
+                if s.prefix_cache and not cap["seeded"]:
+                    # the first completed prefill donates the shared
+                    # head to the cache (its holds book real pages)
+                    cap["seeded"] = True
+                    if s.paged:
+                        cap["reserved"] += shared_pages
+            if swap_pages:  # whole-page DMA over PCIe rides it too
+                dur += self.cost.kv_swap_time(swap_pages, s.page_size)
             gpu_busy += dur
             for slot in active:          # one token per live slot
                 slot[1] -= 1
@@ -390,7 +432,7 @@ class ServingSimulator:
                 slot[0].t_gen_end = t + dur
                 done.append(slot[0])
                 if s.paged:              # pages freed the step it leaves
-                    cap["reserved"] -= req_pages
+                    cap["reserved"] -= slot[2]
             gen_running = True
             heapq.heappush(ev, (t + dur, seq, "gen_step", None))
             seq += 1

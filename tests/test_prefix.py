@@ -1,0 +1,264 @@
+"""Radix prefix cache: shared-prefix token identity + refcount laws.
+
+Headline contract (the PR 6 acceptance criterion, extending the PR 2/3/4
+token-identity chain): a paged ``ContinuousGenerator`` with
+``prefix_cache=True`` serving a shared-prefix workload produces
+token-identical outputs to the uncached dense whole-batch ``Generator``,
+on both the scan-based ``Model`` path and the offloading
+``StreamedExecutor`` path — including copy-on-write divergence after a
+shared prefix and preempt→resume of slots holding shared pages.
+
+The hypothesis property suite for the refcount conservation law lives in
+``tests/test_prefix_pool.py``; this module is deliberately
+hypothesis-free so it always runs in the CI fast tier.
+"""
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.serving.generator import (ContinuousGenerator, Generator,
+                                     GeneratorConfig)
+
+CTX, MAX_NEW = 16, 5
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    params = Model(cfg, remat=False).init(jax.random.PRNGKey(0),
+                                          jnp.float32)
+    return cfg, params
+
+
+def _shared_prompts(n=6):
+    """Three prefix groups: identical pairs plus divergent tails."""
+    base = ["alpha beta gamma", "alpha beta delta", "omega psi chi"]
+    return [f"{base[i % 3]} item{i // 3}" for i in range(n)]
+
+
+def _run_serial(cont, prompts):
+    """Join/step/harvest driver; joins as capacity allows (FIFO)."""
+    pending = list(enumerate(prompts))[::-1]
+    results = [None] * len(prompts)
+    tick = 0
+    while pending or cont.active_slots:
+        while pending and cont.admit_capacity > 0:
+            key, prompt = pending.pop()
+            if cont.join(key, prompt) is None:
+                pending.append((key, prompt))
+                break
+        cont.step()
+        for key, text, _ in cont.harvest():
+            results[key] = text
+        tick += 1
+        assert tick < 500, "prefix driver stalled"
+    assert all(r is not None for r in results)
+    return results
+
+
+def _drained(cont):
+    """All leases and tables returned; only the cache still holds pages."""
+    assert cont.free_slots == cont.num_slots
+    assert cont.kv.pool.used_pages == 0
+    assert cont.kv.pool.reserved_pages == 0
+    assert (cont.kv.pool.free_pages + cont.kv.pool.referenced_pages
+            == cont.kv.pool.capacity)
+    # every page still held (device or host) is the cache's
+    assert cont.kv.pool.referenced_pages == cont.prefix.device_pages
+    assert cont.kv.host.used_pages == cont.prefix.host_pages
+    cont.prefix.clear(cont.kv, cont.cache if not cont.streamed
+                      else cont.caches)
+    assert cont.kv.pool.free_pages == cont.kv.pool.capacity
+    assert cont.kv.host.used_pages == 0
+
+
+# ---------------------------------------------------------------- equivalence
+
+@pytest.mark.parametrize("chunk", [None, 7])
+def test_shared_prefix_token_identical(tiny_model, chunk):
+    """Cache-hit joins (full-page shares, partial boundary copies and
+    divergent tails) never change greedy outputs vs the uncached dense
+    whole-batch reference — inline and chunked prefill."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _shared_prompts()
+    dense = Generator(cfg, params, g, streamed=False).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=3, streamed=False,
+                               paged=True, page_size=4, prefix_cache=True,
+                               prefill_chunk=chunk)
+    assert _run_serial(cont, prompts) == dense
+    assert cont.prefix.stats.hits > 0
+    assert cont.prefix_hit_tokens > 0
+    _drained(cont)
+
+
+def test_shared_prefix_token_identical_streamed(tiny_model):
+    """Same contract through the offloading StreamedExecutor path (the
+    suffix prefill rides ``prefill_chunk`` with a block table)."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _shared_prompts(4)
+    dense = Generator(cfg, params, g, streamed=True).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=True,
+                               paged=True, page_size=4, prefix_cache=True)
+    assert _run_serial(cont, prompts) == dense
+    assert cont.prefix.stats.hits > 0
+    _drained(cont)
+
+
+def test_cow_divergence_on_ragged_context(tiny_model):
+    """ctx % page_size != 0: the donor's cached tail page is shared with
+    the cache, so its first decode past the boundary must detach by CoW
+    — and the follower hitting the same prefix still reads the pristine
+    cached page.  Outputs stay identical to dense."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=18, max_new_tokens=MAX_NEW)  # 18 % 4 != 0
+    prompts = ["recurring shared question"] * 4
+    dense = Generator(cfg, params, g, streamed=False).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                               paged=True, page_size=4, prefix_cache=True)
+    assert _run_serial(cont, prompts) == dense
+    assert cont.cow_copies >= 1, "donor tail never detached"
+    assert cont.prefix.stats.hits >= 1
+    _drained(cont)
+
+
+def test_preempt_resume_of_shared_slots(tiny_model):
+    """Preempting a slot whose block table maps cache-shared pages, then
+    resuming it onto fresh private pages, keeps outputs identical and
+    leaves the cache's references intact."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _shared_prompts()
+    dense = Generator(cfg, params, g, streamed=False).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=3, streamed=False,
+                               paged=True, page_size=4, prefix_cache=True)
+    pending = list(enumerate(prompts))[::-1]
+    results = [None] * len(prompts)
+    parked = []
+    tick = cycles = 0
+    while pending or cont.active_slots or cont.parked_slots:
+        for due, handle in list(parked):
+            if tick >= due and cont.resume(handle) is not None:
+                parked.remove((due, handle))
+                cycles += 1
+        while pending and cont.admit_capacity > 0:
+            key, prompt = pending.pop()
+            if cont.join(key, prompt) is None:
+                pending.append((key, prompt))
+                break
+        if tick % 3 == 2:
+            victim = cont.swap_victim()
+            if victim is not None:
+                handle = cont.preempt(victim)
+                if handle is not None:
+                    parked.append((tick + 2, handle))
+        cont.step()
+        for key, text, _ in cont.harvest():
+            results[key] = text
+        tick += 1
+        assert tick < 500, "preempt driver stalled"
+    assert results == dense
+    assert cycles > 0, "no preemption cycle actually happened"
+    assert cont.prefix.stats.hits > 0
+    _drained(cont)
+
+
+# --------------------------------------------------------- cache mechanics
+
+def test_partial_page_boundary_copy(tiny_model):
+    """A hit ending mid-page copies the boundary page into a private
+    page at join time: the cached page's content is never mutated by
+    the joiner's suffix prefill."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=2)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                               paged=True, page_size=8, prefix_cache=True)
+    ref = cont.join("a", "alpha beta gamma")
+    while cont.active_slots:
+        cont.step()
+    cont.harvest()
+    toks = cont.tok.encode("alpha beta DIVERGENT", g.ctx_len)
+    pools = cont.cache
+    nodes, m, pools = cont.prefix.match(toks, cont.kv, pools)
+    cont.cache = pools
+    assert 0 < m < g.ctx_len            # genuine partial match
+    assert m % cont.page_size != 0      # ...ending inside a page
+    cached = [n.page for n in nodes]
+    cont.prefix.unpin(nodes, cont.kv)
+    ref = cont.join("b", "alpha beta DIVERGENT")
+    assert ref is not None
+    tab = cont.kv.pool.table(ref.index)
+    boundary_block = m // cont.page_size
+    # the boundary block is a private copy, not the cached page itself
+    assert tab[boundary_block] not in cached
+    while cont.active_slots:
+        cont.step()
+    cont.harvest()
+    _drained(cont)
+
+
+def test_eviction_never_races_a_matched_join(tiny_model):
+    """The match→admit window: a reclaim pass fired between ``match``
+    and the join that maps the nodes must not free the pinned pages
+    (refcount 2: cache + pin).  After ``unpin`` they become evictable
+    again."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=1)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                               paged=True, page_size=4, prefix_cache=True,
+                               host_page_budget=0)   # force hard drops
+    cont.join("a", "alpha beta gamma")
+    while cont.active_slots:
+        cont.step()
+    cont.harvest()
+    toks = cont.tok.encode("alpha beta gamma", g.ctx_len)
+    nodes, m, cont.cache = cont.prefix.match(toks, cont.kv, cont.cache)
+    assert nodes and m > 0
+    for n in nodes:
+        assert cont.kv.pool.refcount(n.page) == 2    # cache + pin
+    freed, cont.cache = cont.prefix.reclaim(10 ** 6, cont.kv, cont.cache)
+    assert freed == 0                                # pins block eviction
+    for n in nodes:
+        assert n.page is not None and not n.on_host
+        assert cont.kv.pool.refcount(n.page) == 2
+    cont.prefix.unpin(nodes, cont.kv)
+    freed, cont.cache = cont.prefix.reclaim(10 ** 6, cont.kv, cont.cache)
+    assert freed == len(nodes)                       # now fully evictable
+    assert cont.kv.pool.free_pages == cont.kv.pool.capacity
+
+
+def test_demote_and_revive_through_host_tier(tiny_model):
+    """Cold cached prefixes demote to the host pool under budget
+    pressure and revive (H2D) on the next hit — tokens unchanged."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = ["alpha beta gamma one"] * 2
+    dense = Generator(cfg, params, g, streamed=False).generate(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                               paged=True, page_size=4, prefix_cache=True)
+    out = [None, None]
+    ref = cont.join(0, prompts[0])
+    while cont.active_slots:
+        cont.step()
+    for key, text, _ in cont.harvest():
+        out[key] = text
+    # demote everything to the host tier, then join the same prompt
+    pools = cont.cache
+    freed, cont.cache = cont.prefix.reclaim(10 ** 6, cont.kv, pools)
+    assert freed > 0
+    assert cont.prefix.device_pages == 0
+    assert cont.prefix.host_pages > 0
+    ref = cont.join(1, prompts[1])
+    assert ref is not None
+    assert cont.prefix.stats.revived_pages > 0
+    assert cont.prefix.stats.hits >= 1
+    while cont.active_slots:
+        cont.step()
+    for key, text, _ in cont.harvest():
+        out[key] = text
+    assert out == dense
+    _drained(cont)
+    assert cont.kv.host.used_pages == 0

@@ -1,0 +1,132 @@
+"""Property tests for page sharing: the refcount conservation law.
+
+The ``kvpool.py`` contract under prefix sharing: every allocated page's
+refcount equals its block table occurrences plus its standalone holds
+(the prefix cache's references and match-time pins), ``free ∩
+referenced = ∅``, and no page is ever freed while any reference
+remains.  Pure bookkeeping (no JAX), so arbitrary interleavings run
+fast under the bounded deterministic hypothesis profile (see
+tests/conftest.py).  The model-level prefix-cache contract lives in
+``tests/test_prefix.py``.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")   # pinned in requirements.txt; skip, never collection-error
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kvpool import PagePool, TRASH_PAGE
+
+SHARE_OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "share", "ensure", "release",
+                               "pin", "unpin"]),
+              st.integers(min_value=0, max_value=9),
+              st.integers(min_value=0, max_value=24)),
+    max_size=60)
+
+
+def _share_invariants(pool, tables, holds):
+    """refcount == table occurrences + standalone holds, exactly."""
+    want = {}
+    for tab in tables.values():
+        for p in tab:
+            want[p] = want.get(p, 0) + 1
+    for p, n in holds.items():
+        if n:
+            want[p] = want.get(p, 0) + n
+    assert {p: pool.refcount(p) for p in want} == want
+    assert pool.referenced_pages == len(want)
+    free = set(range(1, pool.capacity + 1)) - set(want)
+    assert pool.free_pages == len(free)               # free ∩ referenced = ∅
+    assert TRASH_PAGE not in want
+    assert pool.reserved_pages <= pool.free_pages
+
+
+@given(cap=st.integers(min_value=2, max_value=12),
+       page=st.integers(min_value=1, max_value=4), ops=SHARE_OPS)
+@settings(max_examples=80)
+def test_refcount_conservation_under_sharing(cap, page, ops):
+    """Arbitrary interleavings of shared admission, standalone holds
+    (cache refs / match pins), growth and release keep the refcount
+    ledger exactly equal to live table references plus holds."""
+    pool = PagePool(cap, page)
+    tables = {}     # key -> expected table (mirrors pool.table)
+    lengths = {}
+    holds = {}      # page -> standalone hold count
+    nxt = 0
+    for op, pick, amount in ops:
+        if op == "admit":
+            ln = max(amount, 1)
+            if pool.admit(nxt, ln):
+                pool.ensure(nxt, min(ln, page))
+                tables[nxt] = list(pool.table(nxt))
+                lengths[nxt] = ln
+            nxt += 1
+        elif op == "share" and tables:
+            # share a prefix of an existing table into a new key —
+            # refcounts transfer from pins the caller already holds
+            donor = sorted(tables)[pick % len(tables)]
+            shared = tables[donor][:1 + amount % max(len(tables[donor]), 1)]
+            for p in shared:
+                pool.incref(p)                         # match-time pins
+            ln = max(lengths[donor], len(shared) * page)
+            if pool.admit(nxt, ln, shared=shared):     # pins transfer
+                tables[nxt] = list(shared)
+                lengths[nxt] = ln
+            else:
+                for p in shared:                       # nothing retained
+                    pool.decref(p)
+            nxt += 1
+        elif op == "ensure" and tables:
+            k = sorted(tables)[pick % len(tables)]
+            try:
+                pool.ensure(k, min(lengths[k], len(tables[k]) * page
+                                   + amount))
+                tables[k] = list(pool.table(k))
+            except Exception:
+                pass                                   # state unchanged
+        elif op == "release" and tables:
+            k = sorted(tables)[pick % len(tables)]
+            pool.release(k)
+            del tables[k], lengths[k]
+        elif op == "pin":
+            got = pool.grab(1)
+            if got is not None:
+                holds[got[0]] = holds.get(got[0], 0) + 1
+        elif op == "unpin" and any(holds.values()):
+            held = sorted(p for p, n in holds.items() if n)
+            p = held[pick % len(held)]
+            pool.decref(p)
+            holds[p] -= 1
+            if not holds[p]:
+                del holds[p]
+        _share_invariants(pool, tables, holds)
+    for k in list(tables):
+        pool.release(k)
+        del tables[k]
+        _share_invariants(pool, tables, holds)
+    for p in list(holds):
+        for _ in range(holds.pop(p)):
+            pool.decref(p)
+    assert pool.free_pages == pool.capacity            # no leaks
+
+
+@given(cap=st.integers(min_value=4, max_value=12),
+       page=st.integers(min_value=1, max_value=4),
+       n_shared=st.integers(min_value=1, max_value=3))
+@settings(max_examples=60)
+def test_no_page_freed_while_shared(cap, page, n_shared):
+    """Releasing one holder of a shared page never frees it while
+    another table (or a standalone hold) still references it."""
+    pool = PagePool(cap, page)
+    assert pool.admit("donor", n_shared * page)
+    pool.ensure("donor", n_shared * page)
+    shared = list(pool.table("donor"))
+    for p in shared:
+        pool.incref(p)
+    assert pool.admit("joiner", n_shared * page, shared=shared)
+    pool.release("donor")
+    for p in shared:                    # joiner's references keep them
+        assert pool.refcount(p) == 1
+        assert p in pool.table("joiner")
+    pool.release("joiner")
+    assert pool.free_pages == pool.capacity
