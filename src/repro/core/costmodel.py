@@ -153,6 +153,22 @@ class CostModel:
         flops = 2.0 * batch * self.chunks_per_partition * self.db_dim
         return flops / self.hw.cpu_flops
 
+    @property
+    def hot_partition_dev_bytes(self) -> float:
+        """Device bytes of one promoted hot partition: the raw float32
+        embedding matrix, without the host-side index/allocator overhead
+        (the hot tier uploads exactly what the top-k kernel reads)."""
+        return self.chunks_per_partition * self.db_dim * 4.0
+
+    def device_search_time(self, batch: int) -> float:
+        """Scoring one *device-resident* (hot) partition: the same top-k
+        matmul the host sweep runs, on accelerator FLOPs, plus one HBM
+        read of the partition — the price the device-byte market weighs
+        against ``partition_load_time`` when arbitrating promotions."""
+        flops = 2.0 * batch * self.chunks_per_partition * self.db_dim
+        return (flops / self.hw.gpu_flops
+                + self.hot_partition_dev_bytes / self.hw.gpu_hbm_bw)
+
     def topk_allgather_time(self, batch: int, top_k: int = 10,
                             shards: Optional[int] = None) -> float:
         """Cross-shard scoreboard fusion: every shard contributes a
@@ -168,7 +184,9 @@ class CostModel:
 
     def retrieval_time(self, batch: int, resident: int,
                        nprobe: Optional[int] = None,
-                       shards: Optional[int] = None) -> float:
+                       shards: Optional[int] = None,
+                       hot_partitions: int = 0,
+                       hot_hit_rate: Optional[float] = None) -> float:
         """One retrieval batch over the probed partitions.
 
         ``nprobe=None`` is the exact all-partition sweep; an IVF placement
@@ -183,14 +201,28 @@ class CostModel:
         probed partitions split across S hosts — each host drives its own
         disk and CPU, so the per-host critical path is ``ceil(work / S)``
         — and the shard-local boards fuse with one (Q, k) all-gather.
+
+        ``hot_partitions``/``hot_hit_rate`` price the device-resident hot
+        tier: the expected ``hot_hit_rate`` fraction of probes (default:
+        the uniform ``hot_partitions / num_partitions``) skips the disk
+        load *and* the host matmul, landing on the accelerator instead;
+        device sweeps run on their own processor, so they join the
+        ``max`` as a third overlapped term.
         """
         s = max(1, self.retrieval_shards if shards is None else shards)
         n_probe = (self.num_partitions if nprobe is None
                    else max(1, min(nprobe, self.num_partitions)))
-        n_load = max(n_probe - resident, 0)
+        n_hot = 0.0
+        if hot_partitions > 0:
+            frac = (hot_hit_rate if hot_hit_rate is not None
+                    else hot_partitions / max(self.num_partitions, 1))
+            n_hot = n_probe * min(max(frac, 0.0), 1.0)
+        host_probe = n_probe - n_hot
+        n_load = max(host_probe - resident, 0.0)
         load = math.ceil(n_load / s) * self.partition_load_time()
-        search = math.ceil(n_probe / s) * self.partition_search_time(batch)
-        return (max(load, search) + 0.1 * min(load, search)
+        search = math.ceil(host_probe / s) * self.partition_search_time(batch)
+        device = n_hot * self.device_search_time(batch)
+        return (max(load, search, device) + 0.1 * min(load, search)
                 + self.topk_allgather_time(batch, shards=s))
 
     # ---------------------------------------------------------- generation

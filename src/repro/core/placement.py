@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import CostModel, HardwareProfile, ModelProfile
 
@@ -52,11 +52,43 @@ class MemoryUse:
                 and self.cpu <= hw.cpu_mem * hw.mem_headroom)
 
 
+@dataclass(frozen=True)
+class MarketSplit:
+    """One device-byte market clearing (the Eq. 2 pool, arbitrated).
+
+    Every elastic consumer of accelerator memory — live KV pages, the
+    radix prefix cache's share, and device-hot IVF partitions — is
+    funded in bytes out of ONE pool (the placement's accelerator KV
+    share), so the budgets can never over-commit in aggregate.
+
+    Invariant (property-tested and CI-asserted)::
+
+        kv_page_budget * page_bytes + hot_bytes <= total_bytes
+        prefix_page_budget <= kv_page_budget      (a cap INSIDE the pool)
+
+    ``host_page_budget`` is the ``c_cpu`` swap headroom — a host-tier
+    budget reported alongside so the policy boundary makes one market
+    call instead of three per-subsystem ones.
+    """
+    total_bytes: float
+    page_bytes: float
+    kv_page_budget: int
+    prefix_page_budget: int
+    host_page_budget: int
+    hot_bytes: int
+    hot_partitions: int
+    hot_hit_rate: float    # expected probe fraction the hot tier answers
+
+    def device_bytes(self) -> float:
+        return self.kv_page_budget * self.page_bytes + self.hot_bytes
+
+
 class PlacementOptimizer:
     def __init__(self, cost: CostModel, avg_ctx_len: int = 512,
                  avg_out_len: int = 128, min_nprobe_frac: float = 0.25,
                  kv_page_size: int = 16,
-                 prefix_cache_frac: float = 0.25):
+                 prefix_cache_frac: float = 0.25,
+                 hot_fracs: Sequence[float] = (0.0, 0.125, 0.25, 0.5)):
         self.cost = cost
         self.avg_ctx = avg_ctx_len
         self.avg_out = avg_out_len
@@ -71,6 +103,11 @@ class PlacementOptimizer:
         if not 0.0 <= prefix_cache_frac <= 1.0:
             raise ValueError("prefix_cache_frac must be in [0, 1]")
         self.prefix_cache_frac = prefix_cache_frac
+        # candidate shares of the device pool the hot partition tier may
+        # bid for; 0.0 must stay in the grid (the no-hot-tier clearing)
+        if any(not 0.0 <= f <= 1.0 for f in hot_fracs) or 0.0 not in hot_fracs:
+            raise ValueError("hot_fracs must lie in [0, 1] and include 0.0")
+        self.hot_fracs = tuple(sorted(hot_fracs))
 
     def _nprobe_grid(self) -> List[int]:
         p_max = self.cost.num_partitions
@@ -143,6 +180,73 @@ class PlacementOptimizer:
         return int(self.prefix_cache_frac
                    * self.kv_page_budget(p, page_size))
 
+    # ------------------------------------------------- device-byte market
+    def device_byte_budget(self, p: Placement) -> float:
+        """The single device-byte pool the market arbitrates: the
+        placement's accelerator KV share (Eq. 2's ``c_gpu * C(B)``
+        term).  Hot partitions are carved *out of* this pool, not added
+        on top — pinning a partition device-side costs live KV pages."""
+        return self.kv_gpu_bytes(p)
+
+    def market(self, p: Placement, page_size: Optional[int] = None,
+               partition_heat: Optional[Sequence[float]] = None
+               ) -> MarketSplit:
+        """Clear the device-byte market: arbitrate the pool between live
+        KV pages, the prefix-cache cap, and device-hot partitions.
+
+        ``partition_heat`` is the observed per-partition popularity,
+        hottest first (the decayed probe counts from
+        ``SearchStats.heat()``); with no observed skew the hot tier is
+        never funded.  Each candidate hot fraction is priced with the
+        cost model — hot probes skip the disk load and the host matmul,
+        while the pages they displace shrink the concurrent batch the
+        paged pool can admit (capacity below the placement's batch
+        serializes generation into rounds) — and the cheapest clearing
+        wins.  Ties keep the smaller hot fraction, so with no heat (or
+        paper-scale partitions that dwarf the pool) the split reproduces
+        the legacy per-subsystem budgets exactly.
+        """
+        ps = page_size or self.kv_page_size
+        page_bytes = max(self.cost.mp.kv_page_bytes(ps), 1.0)
+        total = self.device_byte_budget(p)
+        part_dev = max(self.cost.hot_partition_dev_bytes, 1.0)
+        heat = sorted((h for h in (partition_heat or ()) if h > 0),
+                      reverse=True)
+        mass = float(sum(heat))
+        # a clearing must keep enough pages to admit one request, or the
+        # generator starves no matter how fast retrieval gets
+        need = max(-(-(self.avg_ctx + self.avg_out) // ps), 1)
+
+        def gen_time(pages: int) -> float:
+            cap = max(pages // need, 1)
+            eff = max(min(p.gen_batch, cap), 1)
+            return (self.cost.batch_generation_time(
+                eff, self.avg_ctx, self.avg_out, p.w_gpu, p.c_gpu,
+                w_cpu=p.w_cpu) * (p.gen_batch / eff))
+
+        best: Optional[Tuple[float, int, int, int, float]] = None
+        for frac in self.hot_fracs:
+            n_hot = min(int(frac * total // part_dev), len(heat),
+                        self.cost.num_partitions)
+            hot_bytes = int(n_hot * part_dev)
+            pages = int((total - hot_bytes) // page_bytes)
+            if n_hot > 0 and pages < need:
+                continue
+            hit = (sum(heat[:n_hot]) / mass) if n_hot else 0.0
+            t_ret = self.cost.retrieval_time(
+                p.gen_batch, p.resident_partitions, nprobe=p.nprobe,
+                hot_partitions=n_hot, hot_hit_rate=hit)
+            score = max(t_ret, gen_time(pages))
+            if best is None or score < best[0] - 1e-12:
+                best = (score, n_hot, pages, hot_bytes, hit)
+        _, n_hot, pages, hot_bytes, hit = best
+        return MarketSplit(
+            total_bytes=total, page_bytes=page_bytes,
+            kv_page_budget=pages,
+            prefix_page_budget=int(self.prefix_cache_frac * pages),
+            host_page_budget=self.kv_host_page_budget(p, ps),
+            hot_bytes=hot_bytes, hot_partitions=n_hot, hot_hit_rate=hit)
+
     def paged_batch_capacity(self, p: Placement,
                              page_size: Optional[int] = None,
                              req_len: Optional[int] = None) -> int:
@@ -181,6 +285,18 @@ class PlacementOptimizer:
                 else self.cost.retrieval_shards)
         per = max(host_free_bytes, 0.0) / s
         return [per] * s
+
+    def shard_hot_budgets(self, hot_bytes: float,
+                          shards: Optional[int] = None) -> List[int]:
+        """Split the market's hot-partition byte grant across the
+        retrieval shards (even split, like
+        :meth:`shard_resident_budgets` / :meth:`shard_streamer_budgets`:
+        each shard promotes only its own partitions, so one shard can
+        never spend another shard's bytes)."""
+        s = max(1, shards if shards is not None
+                else self.cost.retrieval_shards)
+        base, rem = divmod(int(max(hot_bytes, 0.0)), s)
+        return [base + (1 if i < rem else 0) for i in range(s)]
 
     # ----------------------------------------------------------- project
     def project(self, p: Placement) -> Placement:

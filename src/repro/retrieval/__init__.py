@@ -1,10 +1,11 @@
 from repro.retrieval.embedding import HashEmbedder
 from repro.retrieval.vectorstore import Partition, SearchStats, VectorStore
-from repro.retrieval.cache import PartitionCache
+from repro.retrieval.cache import HotPartitionSet, PartitionCache
 from repro.retrieval.streamer import PartitionStreamer
 
-__all__ = ["HashEmbedder", "Partition", "SearchStats", "VectorStore",
-           "PartitionCache", "PartitionStreamer", "ShardedIVFStore"]
+__all__ = ["HashEmbedder", "HotPartitionSet", "Partition", "SearchStats",
+           "VectorStore", "PartitionCache", "PartitionStreamer",
+           "ShardedIVFStore"]
 
 
 def __getattr__(name):

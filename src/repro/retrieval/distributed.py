@@ -53,6 +53,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
+from repro.retrieval.cache import HotPartitionSet
 from repro.retrieval.streamer import PartitionStreamer
 from repro.retrieval.vectorstore import SearchStats, VectorStore
 from repro.sharding.specs import MeshContext, shard_map_compat
@@ -220,14 +221,17 @@ def sharded_topk_merge(
 
 class IVFShard:
     """One retrieval shard: a disjoint set of IVF partitions plus its own
-    partition streamer (per-shard disk tier + residency budget)."""
+    partition streamer (per-shard disk tier + residency budget) and its
+    own device-hot tier (per-shard byte grant from the market)."""
 
     def __init__(self, sid: int, pids: Sequence[int],
-                 streamer: PartitionStreamer):
+                 streamer: PartitionStreamer,
+                 hot: Optional[HotPartitionSet] = None):
         self.sid = sid
         self.pids = list(pids)
         self.pid_set = frozenset(pids)
         self.streamer = streamer
+        self.hot = hot
 
     def __repr__(self) -> str:
         return f"IVFShard({self.sid}, pids={self.pids})"
@@ -258,7 +262,10 @@ class ShardedIVFStore:
             IVFShard(sid, pids,
                      PartitionStreamer(store, policy,
                                        free_bytes=free_bytes)
-                     if use_streamers else None)
+                     if use_streamers else None,
+                     # inert (budget 0) until the market grants bytes;
+                     # eligibility scoped to the shard's own partitions
+                     hot=HotPartitionSet(store, eligible=pids))
             for sid, pids in enumerate(self.assignment)]
 
     # ------------------------------------------------------------- budget
@@ -273,6 +280,25 @@ class ShardedIVFStore:
         for shard, budget in zip(self.shards, per_shard_bytes):
             if shard.streamer is not None:
                 shard.streamer.set_budget(max(float(budget), 0.0))
+
+    def set_hot_budgets(self, per_shard_bytes: Sequence[float],
+                        ranking: Sequence[int]) -> None:
+        """Retarget every shard's device-hot tier from the market's byte
+        grant (``PlacementOptimizer.shard_hot_budgets``) and the global
+        heat ranking; each shard's eligibility filter keeps it to its
+        own disjoint partitions."""
+        assert len(per_shard_bytes) == self.num_shards
+        for shard, budget in zip(self.shards, per_shard_bytes):
+            if shard.hot is not None:
+                shard.hot.retarget(int(budget), ranking)
+
+    def hot_partitions(self) -> List[int]:
+        return sorted(pid for shard in self.shards
+                      if shard.hot is not None for pid in shard.hot.pids())
+
+    def hot_device_bytes(self) -> int:
+        return sum(shard.hot.device_bytes() for shard in self.shards
+                   if shard.hot is not None)
 
     def close(self) -> None:
         for shard in self.shards:
@@ -314,7 +340,8 @@ class ShardedIVFStore:
             own = [pid for pid in pids if pid in shard.pid_set]
             board_s, board_i, searched = store.sweep_boards(
                 queries, own, top_k, impl=impl,
-                streamer=shard.streamer, stats=stats)
+                streamer=shard.streamer, stats=stats, hot=shard.hot,
+                qmask=qmask)
             s, i = ops.retrieval_topk_merge(
                 board_s, board_i, qmask & searched[None, :], top_k,
                 impl=impl)

@@ -82,15 +82,24 @@ class PartitionStreamer:
         By yield time the partition is resident; loads of later pids are
         already in flight on the I/O thread.  ``loaded_here`` tells the
         caller it owns the release (same contract as the sync path).
+
+        Stats honesty (hot-tier promotion consumes these numbers): a
+        load is charged to ``partitions_loaded``/``load_seconds`` only
+        when its array is actually installed — a load that raced a
+        concurrent loader is discarded *and* uncounted, because the
+        racing loader already paid for it.  ``prefetched`` counts only
+        loads submitted as *lookahead* (ahead of the sweep cursor when
+        submitted): a load the caller immediately blocks on overlapped
+        nothing, so it is a plain load, not a prefetch.
         """
-        inflight: Dict[int, Optional[Future]] = {}
+        inflight: Dict[int, Optional[Tuple[Future, bool]]] = {}
 
         def fetch(path: str):
             t0 = time.perf_counter()
             arr = np.load(path)
             return arr, time.perf_counter() - t0
 
-        def ensure(idx: int) -> None:
+        def ensure(idx: int, lookahead: bool) -> None:
             if idx >= len(pids) or idx in inflight:
                 return
             p = self.store.partitions[pids[idx]]
@@ -98,7 +107,8 @@ class PartitionStreamer:
                 inflight[idx] = None
             else:
                 try:
-                    inflight[idx] = self._pool.submit(fetch, p.path)
+                    inflight[idx] = (self._pool.submit(fetch, p.path),
+                                     lookahead)
                 except RuntimeError:    # closed streamer: degrade to sync
                     inflight[idx] = None
 
@@ -108,21 +118,24 @@ class PartitionStreamer:
             # ``set_budget``) resizes the lookahead mid-sweep
             depth = self.last_depth = self.depth()
             for ahead in range(j, min(j + depth + 1, len(pids))):
-                ensure(ahead)
-            fut = inflight.pop(j)
+                ensure(ahead, lookahead=ahead > j)
+            entry = inflight.pop(j)
             pid = pids[j]
             p = self.store.partitions[pid]
-            if fut is None:
+            if entry is None:
                 yield pid, False
                 continue
+            fut, was_lookahead = entry
             arr, dt = fut.result()
             overlapped = p.resident       # raced with a concurrent load
             if not overlapped:
                 p.embeddings = arr
-            if stats:
-                stats.partitions_loaded += 1
-                stats.prefetched += 1
-                stats.load_seconds += dt
+                p.nbytes_cached = int(arr.nbytes)
+                if stats:
+                    stats.partitions_loaded += 1
+                    stats.load_seconds += dt
+                    stats.prefetched += int(was_lookahead)
+                    stats.record_load(pid, dt)
             yield pid, not overlapped
 
     def close(self) -> None:

@@ -33,6 +33,30 @@ def perturb_queries(vecs: np.ndarray, n_queries: int, seed: int = 0,
     return (q / np.linalg.norm(q, axis=1, keepdims=True)).astype(np.float32)
 
 
+def zipf_queries(vecs: np.ndarray, groups, n_queries: int,
+                 alpha: float = 1.2, seed: int = 0,
+                 spread: float = 0.2) -> np.ndarray:
+    """Zipf-skewed queries over partition groups.
+
+    The group at popularity rank ``r`` (its position in ``groups``) is
+    drawn with probability ∝ ``1 / r**alpha``; each query is a perturbed
+    member of its group — the skewed-traffic regime a device-hot
+    partition tier exploits (a few partitions absorb most probes).
+    ``groups`` is a sequence of corpus-row index arrays, e.g. the
+    per-partition ``doc_ids`` of a built ``VectorStore``.
+    """
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, len(groups) + 1, dtype=np.float64)
+    pmf = ranks ** -float(alpha)
+    pmf /= pmf.sum()
+    dim = vecs.shape[1]
+    picks = rng.choice(len(groups), size=n_queries, p=pmf)
+    base = np.stack([vecs[groups[g][rng.integers(len(groups[g]))]]
+                     for g in picks])
+    q = base + (spread / np.sqrt(dim)) * rng.normal(size=base.shape)
+    return (q / np.linalg.norm(q, axis=1, keepdims=True)).astype(np.float32)
+
+
 class ArrayEmbedder:
     """Maps text "<i>" to row i of a precomputed matrix — lets
     ``VectorStore.build`` ingest a synthetic corpus."""

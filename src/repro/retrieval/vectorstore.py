@@ -23,8 +23,9 @@ Two upgrades over the flat exact scan:
 from __future__ import annotations
 
 import os
+import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -38,6 +39,7 @@ class Partition:
     embeddings: Optional[np.ndarray]      # None when on disk
     doc_ids: np.ndarray                   # (N,) global chunk ids
     path: Optional[str] = None            # disk location when spilled
+    nbytes_cached: Optional[int] = None   # byte size, pinned at spill/load
 
     @property
     def resident(self) -> bool:
@@ -45,9 +47,21 @@ class Partition:
 
     @property
     def nbytes(self) -> int:
-        if self.embeddings is not None:
-            return self.embeddings.nbytes
-        return int(np.load(self.path, mmap_mode="r").nbytes)
+        """Byte size of the embedding matrix.
+
+        Cached: a spilled partition must not re-open its ``.npy`` with a
+        fresh mmap handle on every call (the handle is only dropped at
+        GC, so per-query size checks used to accumulate open maps).  A
+        recluster/rebuild replaces ``Partition`` objects wholesale, so a
+        ``layout_version`` bump can never serve a stale size.
+        """
+        if self.nbytes_cached is None:
+            if self.embeddings is not None:
+                self.nbytes_cached = int(self.embeddings.nbytes)
+            else:
+                self.nbytes_cached = int(
+                    np.load(self.path, mmap_mode="r").nbytes)
+        return self.nbytes_cached
 
 
 @dataclass
@@ -55,9 +69,68 @@ class SearchStats:
     partitions_searched: int = 0
     partitions_loaded: int = 0
     partitions_pruned: int = 0            # skipped by IVF probe
-    prefetched: int = 0                   # loads satisfied by the streamer
+    prefetched: int = 0                   # loads overlapped by the streamer
     load_seconds: float = 0.0
     search_seconds: float = 0.0
+    hot_hits: int = 0                     # probes answered by the device tier
+    cache_hits: int = 0                   # PartitionCache.touch residency hits
+    cache_misses: int = 0
+    # per-partition observations feeding hot/cold tiering: decayed probe
+    # counts (recency-weighted popularity) and an EWMA of observed load
+    # seconds.  Mutated from the retrieval worker thread while the policy
+    # boundary reads rankings, hence the lock.
+    hit_counts: Dict[int, float] = field(default_factory=dict,
+                                         repr=False, compare=False)
+    load_ewma: Dict[int, float] = field(default_factory=dict,
+                                        repr=False, compare=False)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    def record_search(self, pid: int, weight: float = 1.0) -> None:
+        """Bump the partition's probe count.  ``weight`` is the number of
+        queries in the batch that probed it — per-query votes, not
+        per-sweep visits, or a skewed workload whose every batch touches
+        the whole union would look uniform to the hot ranking."""
+        with self._lock:
+            self.hit_counts[pid] = (self.hit_counts.get(pid, 0.0)
+                                    + float(weight))
+
+    def record_load(self, pid: int, dt: float) -> None:
+        with self._lock:
+            prev = self.load_ewma.get(pid)
+            self.load_ewma[pid] = dt if prev is None else 0.5 * prev + 0.5 * dt
+
+    def decay(self, factor: float = 0.5, floor: float = 1e-3) -> None:
+        """Age the per-partition probe counts (called at policy
+        boundaries) so the hot ranking tracks the *current* query skew;
+        counts that decay below ``floor`` are dropped."""
+        with self._lock:
+            self.hit_counts = {pid: c * factor
+                               for pid, c in self.hit_counts.items()
+                               if c * factor >= floor}
+
+    def _ranked(self) -> List[Tuple[int, float]]:
+        with self._lock:
+            items = list(self.hit_counts.items())
+        items.sort(key=lambda kv: (-kv[1], kv[0]))
+        return items
+
+    def hot_ranking(self) -> List[int]:
+        """Partition ids, hottest (most recently probed) first."""
+        return [pid for pid, _ in self._ranked()]
+
+    def heat(self) -> List[float]:
+        """Decayed probe counts in ``hot_ranking`` order (the market's
+        expected-hit-mass input)."""
+        return [c for _, c in self._ranked()]
+
+    @property
+    def hot_hit_rate(self) -> float:
+        return self.hot_hits / max(self.partitions_searched, 1)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache_hits / max(self.cache_hits + self.cache_misses, 1)
 
 
 def kmeans_centroids(embs: np.ndarray, k: int, iters: int = 10,
@@ -193,6 +266,7 @@ class VectorStore:
                 self.root, f"part{pid}_v{self.layout_version}.npy")
             np.save(path, p.embeddings)
             p.path = path
+        p.nbytes_cached = int(p.embeddings.nbytes)
         p.embeddings = None
 
     def load(self, pid: int) -> float:
@@ -202,6 +276,7 @@ class VectorStore:
             return 0.0
         t0 = time.perf_counter()
         p.embeddings = np.load(p.path)
+        p.nbytes_cached = int(p.embeddings.nbytes)
         return time.perf_counter() - t0
 
     def release(self, pid: int) -> None:
@@ -253,16 +328,19 @@ class VectorStore:
                impl: Optional[str] = None,
                nprobe: Optional[int] = None,
                streamer=None,
-               stats: Optional[SearchStats] = None
-               ) -> Tuple[np.ndarray, np.ndarray]:
+               stats: Optional[SearchStats] = None,
+               hot=None) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k across the probed partitions (default: all ⇒ exact).
 
         ``nprobe`` prunes to the closest clusters (IVF); ``streamer``
         overlaps disk loads of upcoming partitions with the top-k kernel
         on the current one.  Non-resident partitions are loaded on demand
         (real disk I/O) and released afterwards, matching the paper's
-        on-demand cache behaviour.  Returns (scores (Q, k), global chunk
-        ids (Q, k)).
+        on-demand cache behaviour.  ``hot`` (a
+        :class:`~repro.retrieval.cache.HotPartitionSet`) answers probed
+        partitions that are promoted device-resident without touching the
+        host tier at all.  Returns (scores (Q, k), global chunk ids
+        (Q, k)).
         """
         nq = queries.shape[0]
         if nprobe is not None:
@@ -282,14 +360,16 @@ class VectorStore:
             stats.partitions_pruned += self.num_partitions - len(pids)
 
         board_s, board_i, searched = self.sweep_boards(
-            queries, pids, top_k, impl=impl, streamer=streamer, stats=stats)
+            queries, pids, top_k, impl=impl, streamer=streamer, stats=stats,
+            hot=hot, qmask=qmask)
         scores, gids = ops.retrieval_topk_merge(
             board_s, board_i, qmask & searched[None, :], top_k, impl=impl)
         return np.asarray(scores), np.asarray(gids)
 
     def sweep_boards(self, queries: np.ndarray, pids: Sequence[int],
                      top_k: int, impl: Optional[str] = None,
-                     streamer=None, stats: Optional[SearchStats] = None
+                     streamer=None, stats: Optional[SearchStats] = None,
+                     hot=None, qmask: Optional[np.ndarray] = None
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Per-partition top-k sweep over ``pids`` without the merge.
 
@@ -300,6 +380,15 @@ class VectorStore:
         chunks can never mint phantom hits on chunk 0.  Sharded callers
         (``ShardedIVFStore``) run one sweep per shard with their own
         streamer and fuse the boards themselves.
+
+        Hot tier: partitions promoted into ``hot`` are scored straight
+        from their device-resident arrays — no disk load, no host copy,
+        no release — through the *same* ``ops.retrieval_topk`` the host
+        path runs, so the scoreboards are bit-identical either way (the
+        merge only selects).  Entries are captured up front, so a policy
+        retarget demoting a partition mid-sweep cannot drop its array
+        out from under the kernel: the captured reference keeps it
+        alive for exactly this sweep.
 
         Residency discipline: any partition this sweep loads is released
         again even if a kernel raises or the caller's streamer is torn
@@ -313,11 +402,40 @@ class VectorStore:
         board_i = np.full((nq, self.num_partitions, top_k), -1, np.int32)
         searched = np.zeros(self.num_partitions, bool)
 
+        # heat weight: how many queries in this batch probed the pid
+        # (``qmask`` column sums); without a probe mask every sweep visit
+        # counts once — acceptable for direct callers, but search() always
+        # passes the mask so skew survives into the hot ranking
+        def heat_w(pid: int) -> float:
+            return (float(qmask[:, pid].sum()) if qmask is not None
+                    else 1.0)
+
+        hot_entries = {}
+        if hot is not None:
+            for pid in pids:
+                entry = hot.lookup(pid)
+                if entry is not None:
+                    hot_entries[pid] = entry
+        for pid, (dev_emb, doc_ids) in hot_entries.items():
+            t0 = time.perf_counter()
+            k_eff = min(top_k, int(dev_emb.shape[0]))
+            if k_eff > 0:
+                s, i = ops.retrieval_topk(q, dev_emb, k_eff, impl=impl)
+                board_s[:, pid, :k_eff] = np.asarray(s)
+                board_i[:, pid, :k_eff] = doc_ids[np.asarray(i)]
+            searched[pid] = True
+            if stats:
+                stats.search_seconds += time.perf_counter() - t0
+                stats.partitions_searched += 1
+                stats.hot_hits += 1
+                stats.record_search(pid, heat_w(pid))
+        cold_pids = [pid for pid in pids if pid not in hot_entries]
+
         def sweep():
             if streamer is not None:
-                yield from streamer.stream(pids, stats=stats)
+                yield from streamer.stream(cold_pids, stats=stats)
             else:
-                for pid in pids:
+                for pid in cold_pids:
                     p = self.partitions[pid]
                     loaded_here = False
                     if not p.resident:
@@ -326,6 +444,7 @@ class VectorStore:
                         if stats:
                             stats.partitions_loaded += 1
                             stats.load_seconds += dt
+                            stats.record_load(pid, dt)
                     yield pid, loaded_here
 
         loaded_pending: set = set()
@@ -338,6 +457,7 @@ class VectorStore:
                     if stats:
                         stats.partitions_loaded += 1
                         stats.load_seconds += dt
+                        stats.record_load(pid, dt)
                 if loaded_here:
                     loaded_pending.add(pid)
                 t0 = time.perf_counter()
@@ -351,6 +471,7 @@ class VectorStore:
                 if stats:
                     stats.search_seconds += time.perf_counter() - t0
                     stats.partitions_searched += 1
+                    stats.record_search(pid, heat_w(pid))
                 if loaded_here:
                     self.release(pid)
                     loaded_pending.discard(pid)

@@ -46,7 +46,7 @@ from repro.core.pipeline import (Pipeline, PipelineWorker, StageQueue,
 from repro.core.placement import Placement, PlacementOptimizer
 from repro.core.prefetch import PrefetchPolicy
 from repro.core.scheduler import BacklogScheduler
-from repro.retrieval.cache import PartitionCache
+from repro.retrieval.cache import HotPartitionSet, PartitionCache
 from repro.retrieval.embedding import HashEmbedder
 from repro.retrieval.streamer import PartitionStreamer
 from repro.retrieval.vectorstore import SearchStats, VectorStore
@@ -68,6 +68,9 @@ class PolicyEvent:
     parked: Optional[int] = None       # requests swapped out right now
     prefix_pages: Optional[int] = None   # prefix-cache device-page cap
     prefix_hit_tokens: Optional[int] = None  # cumulative cached tokens
+    hot_partitions: Optional[int] = None  # device-hot IVF partitions
+    hot_bytes: Optional[int] = None       # device bytes they occupy
+    hot_hit_rate: Optional[float] = None  # observed hot-answered probe frac
 
 
 class RagdollEngine:
@@ -100,6 +103,10 @@ class RagdollEngine:
         if retrieval_shards > 1:
             from repro.retrieval.distributed import ShardedIVFStore
             self.sharded = ShardedIVFStore(store, retrieval_shards)
+        # device-hot partition tier for the S=1 path (each shard of a
+        # sharded store owns its own).  Inert (budget 0) until the
+        # device-byte market grants it bytes at a policy boundary.
+        self.hot = HotPartitionSet(store)
         self.nprobe: Optional[int] = None   # set by the placement policy
         self.policy_trace: List[PolicyEvent] = []
         self.retrieval_stats = SearchStats()   # cumulative, for reporting
@@ -142,7 +149,7 @@ class RagdollEngine:
         else:
             scores, ids = self.store.search(
                 queries, reqs[0].top_k, nprobe=self.nprobe,
-                streamer=self.streamer, stats=stats)
+                streamer=self.streamer, stats=stats, hot=self.hot)
         chunks = self.store.get_chunks(ids)
         t1 = time.perf_counter()
         for r, ch in zip(reqs, chunks):
@@ -274,31 +281,52 @@ class RagdollEngine:
         placement = self.opt.solve(b)
         self.pcache.set_target(placement.resident_partitions)
         self.nprobe = placement.nprobe
+        # ONE device-byte market clears every elastic accelerator-memory
+        # consumer — live KV pages, the prefix-cache cap, swap headroom,
+        # and device-hot partitions — from the observed per-partition
+        # heat, so the budgets can never over-commit in aggregate
+        stats = self.retrieval_stats
+        ranking = stats.hot_ranking()
+        paged = getattr(self.generator, "paged", False)
+        split = self.opt.market(
+            placement,
+            page_size=self.generator.page_size if paged else None,
+            partition_heat=stats.heat())
         if self.continuous:
             # dynamic capacity: grow/shrink the slot table with the live
             # placement's gen_batch; paged generators also retarget their
-            # KV page budget from the placement's accelerator KV share
-            # (retarget clamps it to the block-table-addressable range)
+            # KV page budget from the market's clearing (retarget clamps
+            # it to the block-table-addressable range)
             pages = host_pages = prefix_pages = None
-            if getattr(self.generator, "paged", False):
-                pages = self.opt.kv_page_budget(
-                    placement, self.generator.page_size)
+            if paged:
+                pages = split.kv_page_budget
                 # the c_cpu KV share funds the swap pool: a placement
                 # that demotes KV to the host grows preemption headroom
-                host_pages = self.opt.kv_host_page_budget(
-                    placement, self.generator.page_size)
-                # arbitrate device pages between live KV and the radix
-                # prefix cache: the cache's share is a cap *inside* the
+                host_pages = split.host_page_budget
+                # the radix prefix cache's share is a cap *inside* the
                 # pool budget, enforced by LRU demotion to the host tier
                 if getattr(self.generator, "prefix", None) is not None:
-                    prefix_pages = self.opt.prefix_cache_page_budget(
-                        placement, self.generator.page_size)
+                    prefix_pages = split.prefix_page_budget
             applied = self.generator.retarget(
                 num_slots=b, page_budget=pages,
                 host_page_budget=host_pages,
                 prefix_page_budget=prefix_pages)
         else:
             applied = {}
+        # hot tier retarget under the market's byte grant: promote down
+        # the observed heat ranking, demote what no longer fits
+        if self.sharded is not None:
+            self.sharded.set_hot_budgets(
+                self.opt.shard_hot_budgets(split.hot_bytes,
+                                           self.sharded.num_shards),
+                ranking)
+            hot_parts = len(self.sharded.hot_partitions())
+            hot_bytes = self.sharded.hot_device_bytes()
+        else:
+            self.hot.retarget(split.hot_bytes, ranking)
+            hot_parts = len(self.hot)
+            hot_bytes = self.hot.device_bytes()
+        stats.decay()     # age the heat so the ranking tracks live skew
         # couple the partition streamer's lookahead to the host memory the
         # live placement leaves free (ROADMAP: streamer depth feedback)
         hw = self.opt.cost.hw
@@ -322,7 +350,9 @@ class RagdollEngine:
             parked=getattr(self.generator, "parked_slots", None),
             prefix_pages=applied.get("prefix_pages"),
             prefix_hit_tokens=getattr(self.generator, "prefix_hit_tokens",
-                                      None)))
+                                      None),
+            hot_partitions=hot_parts, hot_bytes=hot_bytes,
+            hot_hit_rate=stats.hot_hit_rate))
 
     # ------------------------------------------------------------- public
     def pump_once(self) -> int:

@@ -31,7 +31,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.costmodel import CostModel
-from repro.core.placement import Placement, PlacementOptimizer
+from repro.core.placement import (MarketSplit, Placement,
+                                  PlacementOptimizer)
 from repro.core.scheduler import BacklogScheduler
 from repro.serving.request import Request
 
@@ -103,6 +104,12 @@ class SimConfig:
     # placement's device page budget (live KV vs cache arbitration).
     prefix_cache: bool = False
     shared_prefix_len: int = 0
+    # device-hot partition tier: the hottest partitions are pinned
+    # device-resident out of the SAME byte pool as KV/prefix pages (the
+    # PlacementOptimizer.market clearing); ``zipf_alpha`` is the query
+    # skew the tier exploits — heat ~ 1/rank^alpha over the partitions
+    hot_tier: bool = False
+    zipf_alpha: float = 1.2
 
 
 @dataclass
@@ -131,6 +138,7 @@ class ServingSimulator:
         self.continuous = (sim.mode == "ragdoll" if sim.continuous is None
                            else sim.continuous)
         self._placement_cache: Dict[int, Placement] = {}
+        self._market_cache: Dict[Placement, "MarketSplit"] = {}
         # seed schedulers from "active profiling" over the cost model
         self.gen_sched = BacklogScheduler(max_batch=sim.max_batch)
         self.ret_sched = BacklogScheduler(max_batch=sim.retrieval_max_batch)
@@ -138,7 +146,8 @@ class ServingSimulator:
                  if b <= sim.max_batch]
         self.gen_sched.seed([(b, self._gen_time(b)) for b in cands])
         self.ret_sched.seed(
-            [(b, self._ret_time(b, self._placement(8).resident_partitions))
+            [(b, self._ret_time(b, self._placement(8).resident_partitions,
+                                p=self._placement(8)))
              for b in (8, 32, 128)])
 
     # ----------------------------------------------------------- costing
@@ -184,10 +193,28 @@ class ServingSimulator:
                 t *= b / eff
         return t
 
+    def _market(self, p: Placement) -> Optional[MarketSplit]:
+        """Clear the device-byte market for a placement (hot-tier mode):
+        the synthetic heat follows the configured Zipf skew over the
+        partitions.  Cached per placement — `Placement` is frozen, and
+        the skew is workload-level, so the clearing is deterministic."""
+        if not self.sim.hot_tier:
+            return None
+        if p not in self._market_cache:
+            heat = [(1.0 / r) ** self.sim.zipf_alpha
+                    for r in range(1, self.cost.num_partitions + 1)]
+            self._market_cache[p] = self.opt.market(
+                p, page_size=self.sim.page_size, partition_heat=heat)
+        return self._market_cache[p]
+
     def _ret_time(self, b: int, resident: int,
-                  nprobe: Optional[int] = None) -> float:
-        return self.cost.retrieval_time(b, resident, nprobe=nprobe,
-                                        shards=self.sim.retrieval_shards)
+                  nprobe: Optional[int] = None,
+                  p: Optional[Placement] = None) -> float:
+        split = self._market(p) if p is not None else None
+        return self.cost.retrieval_time(
+            b, resident, nprobe=nprobe, shards=self.sim.retrieval_shards,
+            hot_partitions=split.hot_partitions if split else 0,
+            hot_hit_rate=split.hot_hit_rate if split else None)
 
     def _nprobe(self, p: Placement) -> Optional[int]:
         """Serial baselines (vLLMRAG/AccRAG) run the exact all-partition
@@ -232,7 +259,7 @@ class ServingSimulator:
             batch, queue = queue[:b], queue[b:]
             p = self._placement(len(batch))
             t_ret = self._ret_time(len(batch), p.resident_partitions,
-                                   self._nprobe(p))
+                                   self._nprobe(p), p=p)
             t_gen = self._gen_time(len(batch))
             for r in batch:
                 r.t_ret_start = now
@@ -333,7 +360,7 @@ class ServingSimulator:
             batch = [ret_q.pop(0) for _ in range(min(b, len(ret_q)))]
             p = cap["p"]
             dur = self._ret_time(len(batch), p.resident_partitions,
-                                 self._nprobe(p))
+                                 self._nprobe(p), p=p)
             for r in batch:
                 r.t_ret_start = t
                 r.t_ret_end = t + dur
@@ -397,6 +424,8 @@ class ServingSimulator:
                                              if s.paged else None),
                               "swapped": len(swapped) if s.paged else None,
                               "in_flight": len(active) + len(swapped),
+                              "hot": (self._market(p).hot_partitions
+                                      if s.hot_tier else None),
                               "nprobe": self._nprobe(p)
                               or self.cost.num_partitions})
             cap["steps"] += 1
@@ -482,7 +511,7 @@ class ServingSimulator:
             p = self._placement(self.gen_sched.choose_batch(
                 max(len(ctx_q), 1)) or 1)
             dur = self._ret_time(len(batch), p.resident_partitions,
-                                 self._nprobe(p))
+                                 self._nprobe(p), p=p)
             for r in batch:
                 r.t_ret_start = t
                 r.t_ret_end = t + dur

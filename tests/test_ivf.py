@@ -115,7 +115,11 @@ def test_streamer_results_identical_to_sync(blob_store):
         streamer.close()
         np.testing.assert_array_equal(i_sync, i_async)
         np.testing.assert_allclose(s_sync, s_async)
-        assert stats.prefetched == stats.partitions_loaded > 0
+        # honest accounting: the sweep's FIRST partition is submitted at
+        # lookahead 0 (the sweep is already waiting on it), so it is a
+        # plain load, not an overlapped prefetch
+        assert stats.partitions_loaded > 0
+        assert stats.prefetched == stats.partitions_loaded - 1
         # sweep left residency untouched (everything released again)
         assert store.resident_set() == []
 
@@ -179,8 +183,62 @@ def test_streamer_tight_budget_sweep_evicts_and_matches_sync(blob_store):
     np.testing.assert_array_equal(i_sync, i_async)
     np.testing.assert_allclose(s_sync, s_async)
     assert streamer.last_depth == 1
-    assert stats.prefetched == stats.partitions_loaded > 0
+    assert stats.partitions_loaded > 0
+    assert stats.prefetched == stats.partitions_loaded - 1
     assert store.resident_set() == []        # every loaded partition evicted
+
+
+def test_streamer_overlapped_load_charges_nothing(blob_store):
+    """Regression (stats double-counting): a prefetch that loses the
+    race to a concurrent load is discarded — it must charge neither
+    ``partitions_loaded``/``load_seconds`` nor ``prefetched`` (the old
+    accounting bumped ``prefetched`` with zero actual overlap)."""
+    store, _ = blob_store
+    for pid in range(store.num_partitions):
+        store.spill(pid)
+    streamer = PartitionStreamer(store)
+    stats = SearchStats()
+    it = streamer.stream([0, 1], stats=stats)
+    pid0, loaded0 = next(it)
+    assert (pid0, loaded0) == (0, True)
+    store.load(1)                  # concurrent load wins the race
+    pid1, loaded1 = next(it)
+    assert (pid1, loaded1) == (1, False)
+    assert list(it) == []
+    streamer.close()
+    # only the partition the STREAMER actually delivered is charged
+    assert stats.partitions_loaded == 1
+    assert stats.prefetched == 0   # pid 0 was submitted at lookahead 0
+    store.release(0)
+    store.release(1)
+    assert store.resident_set() == []
+
+
+def test_cache_target_zero_holds_nothing_and_records_stats(blob_store):
+    """Regression (`target=0` ignored): a zeroed host cache must retain
+    NO residency — the device-byte market relies on a zeroed tier
+    actually holding nothing — while touch hits/misses land in
+    SearchStats."""
+    from repro.retrieval import PartitionCache
+
+    store, _ = blob_store
+    for pid in range(store.num_partitions):
+        store.spill(pid)
+    cache = PartitionCache(store, target=0)
+    stats = SearchStats()
+    cache.touch(2, stats=stats)
+    assert stats.cache_misses == 1 and stats.cache_hits == 0
+    assert cache.resident() == []
+    assert store.resident_set() == []
+    # a real target retains residency again, and re-touches are hits
+    cache.set_target(2)
+    cache.touch(2, stats=stats)
+    cache.touch(2, stats=stats)
+    assert stats.cache_hits == 1 and stats.cache_misses == 2
+    assert cache.resident() == [2]
+    assert 0.0 < stats.cache_hit_rate < 1.0
+    cache.set_target(0)
+    assert store.resident_set() == []
 
 
 def test_closed_streamer_degrades_to_sync(blob_store):
