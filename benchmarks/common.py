@@ -8,11 +8,26 @@ from repro.configs import get_config
 from repro.core.costmodel import (GB, PF_HIGH, PF_LOW, CostModel,
                                   HardwareProfile, ModelProfile)
 from repro.core.placement import PlacementOptimizer
+from repro.obs import NULL_REGISTRY, NULL_TRACER
 from repro.serving.simulator import SimConfig, poisson_workload
 
 # paper database: 32 partitions x 8 GB (TriviaQA embeddings)
 NUM_PARTITIONS = 32
 PARTITION_BYTES = 8 * GB
+
+# benchmark-wide observability sinks: ``run.py --trace-out/--metrics-out``
+# swaps these for live instances via ``set_obs`` and benchmarks that
+# build engines thread them through; the defaults cost one branch
+TRACER = NULL_TRACER
+REGISTRY = NULL_REGISTRY
+
+
+def set_obs(tracer=None, registry=None) -> None:
+    global TRACER, REGISTRY
+    if tracer is not None:
+        TRACER = tracer
+    if registry is not None:
+        REGISTRY = registry
 
 # shortened intervals keep the full suite tractable on one CPU core;
 # --full restores the paper's 20-minute intervals

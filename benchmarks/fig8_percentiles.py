@@ -38,7 +38,8 @@ def _drive_deterministic(eng, reqs):
 
 def engine_rows(n_requests: int = 10, num_slots: int = 3,
                 variants=("dense", "paged", "paged_tight", "paged_swap",
-                          "prefix_off", "prefix_on")):
+                          "prefix_off", "prefix_on"),
+                tracer=None, registry=None):
     """Continuous-trace percentiles from the real mini-engine.
 
     ``dense`` and ``paged`` run identical request streams behind the
@@ -65,6 +66,7 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
     import jax
     import jax.numpy as jnp
 
+    from benchmarks import common
     from repro.configs import get_config
     from repro.core.scheduler import BacklogScheduler
     from repro.models.model import Model
@@ -73,6 +75,9 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
     from repro.serving.generator import ContinuousGenerator, GeneratorConfig
     from repro.serving.request import Request, percentile
 
+    # --trace-out/--metrics-out route the benchmark-wide sinks in here
+    tracer = tracer if tracer is not None else common.TRACER
+    registry = registry if registry is not None else common.REGISTRY
     cfg = get_config("llama3-8b").reduced(num_layers=2)
     params = Model(cfg, remat=False).init(jax.random.PRNGKey(0),
                                           jnp.float32)
@@ -108,7 +113,10 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
             eng = RagdollEngine(store, emb, gen,
                                 BacklogScheduler(max_batch=8),
                                 BacklogScheduler(max_batch=num_slots),
-                                initial_partitions=3, policy_every=2)
+                                initial_partitions=3, policy_every=2,
+                                tracer=tracer,
+                                registry=(registry
+                                          if registry.enabled else None))
             deterministic = variant in ("paged_tight", "paged_swap") \
                 or prefix
             # shared-prefix workload: every request asks the same query,
@@ -131,6 +139,10 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
                 reqs = eng.drain(n_requests, timeout=180)
                 eng.stop()
             assert len(reqs) == n_requests, (variant, len(reqs))
+            if registry.enabled:
+                # sync pull-style sources (pools, prefix cache, search
+                # stats) into the shared registry before the next variant
+                eng.metrics_snapshot()
             lat = [r.latency for r in reqs]
             info = (f"p50={percentile(lat, 50):.3f} "
                     f"p95={percentile(lat, 95):.3f} "

@@ -25,9 +25,21 @@ def main() -> None:
                     help="paper-length workload intervals")
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto/chrome://tracing JSON of the "
+                         "benchmarked engines' span timelines")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a JSON snapshot of the central metrics "
+                         "registry (counters/gauges/histograms/events)")
     args = ap.parse_args()
 
+    from benchmarks import common
     from benchmarks.common import emit
+    if args.trace_out or args.metrics_out:
+        from repro.obs import MetricsRegistry, Tracer
+        common.set_obs(
+            tracer=Tracer() if args.trace_out else None,
+            registry=MetricsRegistry() if args.metrics_out else None)
     mods = MODULES if not args.only else args.only.split(",")
     failures = 0
     print("name,us_per_call,derived")
@@ -40,6 +52,12 @@ def main() -> None:
             failures += 1
             print(f"{name},0.0,ERROR", file=sys.stderr)
             traceback.print_exc()
+    if args.trace_out:
+        n = common.TRACER.export(args.trace_out)
+        print(f"# trace: {n} events -> {args.trace_out}", file=sys.stderr)
+    if args.metrics_out:
+        common.REGISTRY.export(args.metrics_out)
+        print(f"# metrics -> {args.metrics_out}", file=sys.stderr)
     sys.exit(1 if failures else 0)
 
 

@@ -1,0 +1,151 @@
+#!/usr/bin/env python
+"""Trace lint: validate a Perfetto/chrome://tracing JSON export.
+
+Checks the trace-event files written by ``repro.obs.trace.Tracer.export``
+(e.g. ``benchmarks/run.py --trace-out``):
+
+- top level is ``{"traceEvents": [...]}`` and every event carries the
+  required keys (``name``/``ph``/``ts``/``pid``/``tid``);
+- timestamps are monotonically non-decreasing (the exporter stable-sorts
+  by ``ts``, so an out-of-order file means a corrupted export);
+- duration events balance: every ``E`` closes the innermost open ``B``
+  on its thread, and no thread ends with an open stack;
+- async events balance: every ``e`` has a prior ``b`` with the same id;
+- at least one request timeline exists: some trace id appears in the
+  ``trace_ids`` of spans covering the pipeline stages (``--require``
+  overrides the default stage list, comma-separated; prefix a name with
+  ``~`` to make it optional within the covering set).
+
+Exit code 0 when the file passes, 1 with one line per violation when it
+does not::
+
+    python scripts/check_trace.py trace.json
+    python scripts/check_trace.py trace.json --require search,prefill
+"""
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+REQUIRED_KEYS = ("name", "ph", "ts", "pid", "tid")
+
+# default per-request stage coverage: at least one trace id must be
+# seen on spans with all of these names (probe/search -> partition or
+# hot load -> prefill -> decode, the paper's pipeline stages).  load
+# and decode are "any of" groups: a fully-resident sweep never loads
+# from disk and a 1-token generation may finish inside prefill.
+DEFAULT_STAGES = ["search", "prefill"]
+DEFAULT_ANY = [("partition.load", "hot.promote", "shard.sweep",
+                "retrieve.batch"),
+               ("decode.step", "generate.batch", "prefill.chunk")]
+
+
+def check(doc, require=None, any_groups=None):
+    errors = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["top level must be an object with a traceEvents list"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["traceEvents must be a list"]
+    rows = [e for e in events if e.get("ph") != "M"]
+    if not rows:
+        errors.append("trace has no events (metadata only)")
+    last_ts = None
+    open_sync = defaultdict(list)      # (pid, tid) -> [names] B/E stack
+    open_async = defaultdict(int)      # (name, id) -> open count
+    spans_by_id = defaultdict(set)     # trace id -> {span names}
+    for i, e in enumerate(events):
+        required = REQUIRED_KEYS if e.get("ph") != "M" \
+            else ("name", "ph", "pid", "tid")   # metadata rows: no ts
+        missing = [k for k in required if k not in e]
+        if missing:
+            errors.append(f"event {i}: missing keys {missing}")
+            continue
+        if e["ph"] == "M":
+            continue
+        ts = e["ts"]
+        if not isinstance(ts, (int, float)):
+            errors.append(f"event {i}: non-numeric ts {ts!r}")
+            continue
+        if last_ts is not None and ts < last_ts:
+            errors.append(f"event {i}: ts {ts} < previous {last_ts} "
+                          "(not sorted)")
+        last_ts = ts
+        key = (e["pid"], e["tid"])
+        if e["ph"] == "B":
+            open_sync[key].append(e["name"])
+        elif e["ph"] == "E":
+            if not open_sync[key]:
+                errors.append(f"event {i}: E '{e['name']}' on tid "
+                              f"{e['tid']} with no open B")
+            else:
+                top = open_sync[key].pop()
+                if top != e["name"]:
+                    errors.append(f"event {i}: E '{e['name']}' closes "
+                                  f"B '{top}' (bad nesting)")
+        elif e["ph"] == "b":
+            open_async[(e["name"], e.get("id"))] += 1
+        elif e["ph"] == "e":
+            k = (e["name"], e.get("id"))
+            if open_async[k] <= 0:
+                errors.append(f"event {i}: async e '{e['name']}' "
+                              f"id={e.get('id')} with no open b")
+            else:
+                open_async[k] -= 1
+        for tid_ in (e.get("args") or {}).get("trace_ids", []):
+            spans_by_id[tid_].add(e["name"])
+    for (pid, tid), stack in open_sync.items():
+        if stack:
+            errors.append(f"tid {tid}: unclosed B spans at EOF: {stack}")
+    for (name, aid), n in open_async.items():
+        if n > 0:
+            errors.append(f"async '{name}' id={aid}: {n} unclosed b")
+    stages = require if require is not None else DEFAULT_STAGES
+    groups = any_groups if any_groups is not None else DEFAULT_ANY
+    if not stages and not groups:       # coverage check disabled
+        return errors
+    covered = [
+        rid for rid, names in spans_by_id.items()
+        if all(s in names for s in stages)
+        and all(any(g in names for g in grp) for grp in groups)]
+    if not spans_by_id:
+        errors.append("no event carries args.trace_ids — no per-request "
+                      "timelines at all")
+    elif not covered:
+        errors.append(
+            f"no trace id covers the required stages {stages} + "
+            f"one-of{[list(g) for g in groups]}; ids seen: "
+            f"{ {k: sorted(v) for k, v in list(spans_by_id.items())[:5]} }")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="trace JSON written by Tracer.export")
+    ap.add_argument("--require", default=None,
+                    help="comma-separated span names every covered "
+                         "request must include (replaces the default)")
+    args = ap.parse_args()
+    try:
+        with open(args.path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as exc:
+        print(f"check_trace: cannot read {args.path}: {exc}",
+              file=sys.stderr)
+        return 1
+    require = args.require.split(",") if args.require else None
+    any_groups = [] if args.require else None
+    errors = check(doc, require=require, any_groups=any_groups)
+    for err in errors:
+        print(f"check_trace: {err}", file=sys.stderr)
+    if not errors:
+        rows = [e for e in doc["traceEvents"] if e.get("ph") != "M"]
+        ids = {t for e in rows
+               for t in (e.get("args") or {}).get("trace_ids", [])}
+        print(f"check_trace: OK — {len(rows)} events, "
+              f"{len(ids)} request timelines")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

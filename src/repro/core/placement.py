@@ -21,6 +21,8 @@ from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import CostModel, HardwareProfile, ModelProfile
+from repro.obs.metrics import NULL_REGISTRY
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclass(frozen=True)
@@ -88,8 +90,11 @@ class PlacementOptimizer:
                  avg_out_len: int = 128, min_nprobe_frac: float = 0.25,
                  kv_page_size: int = 16,
                  prefix_cache_frac: float = 0.25,
-                 hot_fracs: Sequence[float] = (0.0, 0.125, 0.25, 0.5)):
+                 hot_fracs: Sequence[float] = (0.0, 0.125, 0.25, 0.5),
+                 tracer=None, registry=None):
         self.cost = cost
+        self.tracer = tracer or NULL_TRACER
+        self.registry = registry or NULL_REGISTRY
         self.avg_ctx = avg_ctx_len
         self.avg_out = avg_out_len
         # recall floor: never probe fewer than this fraction of the
@@ -225,27 +230,31 @@ class PlacementOptimizer:
                 w_cpu=p.w_cpu) * (p.gen_batch / eff))
 
         best: Optional[Tuple[float, int, int, int, float]] = None
-        for frac in self.hot_fracs:
-            n_hot = min(int(frac * total // part_dev), len(heat),
-                        self.cost.num_partitions)
-            hot_bytes = int(n_hot * part_dev)
-            pages = int((total - hot_bytes) // page_bytes)
-            if n_hot > 0 and pages < need:
-                continue
-            hit = (sum(heat[:n_hot]) / mass) if n_hot else 0.0
-            t_ret = self.cost.retrieval_time(
-                p.gen_batch, p.resident_partitions, nprobe=p.nprobe,
-                hot_partitions=n_hot, hot_hit_rate=hit)
-            score = max(t_ret, gen_time(pages))
-            if best is None or score < best[0] - 1e-12:
-                best = (score, n_hot, pages, hot_bytes, hit)
+        with self.tracer.span("placement.market", gen_batch=p.gen_batch,
+                              candidates=len(self.hot_fracs)):
+            for frac in self.hot_fracs:
+                n_hot = min(int(frac * total // part_dev), len(heat),
+                            self.cost.num_partitions)
+                hot_bytes = int(n_hot * part_dev)
+                pages = int((total - hot_bytes) // page_bytes)
+                if n_hot > 0 and pages < need:
+                    continue
+                hit = (sum(heat[:n_hot]) / mass) if n_hot else 0.0
+                t_ret = self.cost.retrieval_time(
+                    p.gen_batch, p.resident_partitions, nprobe=p.nprobe,
+                    hot_partitions=n_hot, hot_hit_rate=hit)
+                score = max(t_ret, gen_time(pages))
+                if best is None or score < best[0] - 1e-12:
+                    best = (score, n_hot, pages, hot_bytes, hit)
         _, n_hot, pages, hot_bytes, hit = best
-        return MarketSplit(
+        split = MarketSplit(
             total_bytes=total, page_bytes=page_bytes,
             kv_page_budget=pages,
             prefix_page_budget=int(self.prefix_cache_frac * pages),
             host_page_budget=self.kv_host_page_budget(p, ps),
             hot_bytes=hot_bytes, hot_partitions=n_hot, hot_hit_rate=hit)
+        self.registry.event("market", **dataclasses.asdict(split))
+        return split
 
     def paged_batch_capacity(self, p: Placement,
                              page_size: Optional[int] = None,

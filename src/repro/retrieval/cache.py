@@ -22,6 +22,8 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import NULL_REGISTRY
+from repro.obs.trace import NULL_TRACER
 from repro.retrieval.vectorstore import SearchStats, VectorStore
 
 
@@ -59,11 +61,11 @@ class PartitionCache:
         if pid in self.lru:
             self.lru.remove(pid)
             if stats:
-                stats.cache_hits += 1
+                stats.add(cache_hits=1)
         else:
             dt = self.store.load(pid)
             if stats:
-                stats.cache_misses += 1
+                stats.add(cache_misses=1)
             self._make_room()
         if self.target <= 0:
             self.store.release(pid)
@@ -110,20 +112,28 @@ class HotPartitionSet:
     """
 
     def __init__(self, store: VectorStore, byte_budget: int = 0,
-                 eligible: Optional[Sequence[int]] = None):
+                 eligible: Optional[Sequence[int]] = None,
+                 tracer=None, registry=None):
         self.store = store
         self.byte_budget = int(byte_budget)
         # a sharded store hands each shard's hot set its own pid range so
         # one shard can never spend another shard's byte grant
         self.eligible = None if eligible is None else frozenset(eligible)
+        self.tracer = tracer or NULL_TRACER
+        self.registry = registry or NULL_REGISTRY
         self._dev: Dict[int, Tuple[jnp.ndarray, np.ndarray]] = {}
         self.layout_version = store.layout_version
         self.promotions = 0
         self.demotions = 0
 
+    def _count_demotions(self, n: int) -> None:
+        self.demotions += n
+        if n:
+            self.registry.counter("hot.demotions").inc(n)
+
     def _sync_layout(self) -> None:
         if self.store.layout_version != self.layout_version:
-            self.demotions += len(self._dev)
+            self._count_demotions(len(self._dev))
             self._dev.clear()
             self.layout_version = self.store.layout_version
 
@@ -172,23 +182,28 @@ class HotPartitionSet:
                 entry = self._promote(pid)
             keep[pid] = entry
             spent += nbytes
-        self.demotions += sum(1 for pid in self._dev if pid not in keep)
+        self._count_demotions(
+            sum(1 for pid in self._dev if pid not in keep))
         self._dev = keep
+        self.registry.gauge("hot.partitions").set(len(keep))
+        self.registry.gauge("hot.bytes").set(spent)
 
     def _promote(self, pid: int) -> Tuple[jnp.ndarray, np.ndarray]:
-        p = self.store.partitions[pid]
-        loaded_here = not p.resident
-        if loaded_here:
-            self.store.load(pid)
-        try:
-            dev = jnp.asarray(p.embeddings)
-            ids = np.asarray(p.doc_ids)
-        finally:
-            if loaded_here:       # promotion never leaks host residency
-                self.store.release(pid)
+        with self.tracer.span("hot.promote", pid=pid):
+            p = self.store.partitions[pid]
+            loaded_here = not p.resident
+            if loaded_here:
+                self.store.load(pid)
+            try:
+                dev = jnp.asarray(p.embeddings)
+                ids = np.asarray(p.doc_ids)
+            finally:
+                if loaded_here:   # promotion never leaks host residency
+                    self.store.release(pid)
         self.promotions += 1
+        self.registry.counter("hot.promotions").inc()
         return dev, ids
 
     def clear(self) -> None:
-        self.demotions += len(self._dev)
+        self._count_demotions(len(self._dev))
         self._dev.clear()

@@ -53,6 +53,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
+from repro.obs.metrics import NULL_REGISTRY
+from repro.obs.trace import NULL_TRACER
 from repro.retrieval.cache import HotPartitionSet
 from repro.retrieval.streamer import PartitionStreamer
 from repro.retrieval.vectorstore import SearchStats, VectorStore
@@ -251,9 +253,12 @@ class ShardedIVFStore:
     def __init__(self, store: VectorStore, num_shards: int,
                  policy=None, free_bytes: float = float("inf"),
                  ctx: Optional[MeshContext] = None,
-                 use_streamers: bool = True, seed: int = 0):
+                 use_streamers: bool = True, seed: int = 0,
+                 tracer=None, registry=None):
         self.store = store
         self.ctx = ctx
+        self.tracer = tracer or NULL_TRACER
+        self.registry = registry or NULL_REGISTRY
         self.assignment = assign_partitions(
             store.centroids, num_shards,
             num_partitions=store.num_partitions, seed=seed)
@@ -261,11 +266,14 @@ class ShardedIVFStore:
         self.shards = [
             IVFShard(sid, pids,
                      PartitionStreamer(store, policy,
-                                       free_bytes=free_bytes)
+                                       free_bytes=free_bytes,
+                                       tracer=self.tracer)
                      if use_streamers else None,
                      # inert (budget 0) until the market grants bytes;
                      # eligibility scoped to the shard's own partitions
-                     hot=HotPartitionSet(store, eligible=pids))
+                     hot=HotPartitionSet(store, eligible=pids,
+                                         tracer=self.tracer,
+                                         registry=self.registry))
             for sid, pids in enumerate(self.assignment)]
 
     # ------------------------------------------------------------- budget
@@ -325,7 +333,7 @@ class ShardedIVFStore:
             qmask = np.zeros((nq, store.num_partitions), bool)
             qmask[:, pids] = True
         if stats:
-            stats.partitions_pruned += store.num_partitions - len(pids)
+            stats.add(partitions_pruned=store.num_partitions - len(pids))
 
         local_s: List[np.ndarray] = []
         local_i: List[np.ndarray] = []
@@ -338,10 +346,19 @@ class ShardedIVFStore:
             # preserve the global probe order (most-probed-first,
             # residents ahead) within the shard's own partitions
             own = [pid for pid in pids if pid in shard.pid_set]
-            board_s, board_i, searched = store.sweep_boards(
-                queries, own, top_k, impl=impl,
-                streamer=shard.streamer, stats=stats, hot=shard.hot,
-                qmask=qmask)
+            # each shard sweeps into its own stats object, folded into
+            # the caller's through the locked merge() — totals are
+            # conserved exactly and a future parallel shard sweep cannot
+            # drift the shared counters with unlocked +=
+            shard_stats = SearchStats() if stats else None
+            with self.tracer.span("shard.sweep", sid=shard.sid,
+                                  partitions=len(own)):
+                board_s, board_i, searched = store.sweep_boards(
+                    queries, own, top_k, impl=impl,
+                    streamer=shard.streamer, stats=shard_stats,
+                    hot=shard.hot, qmask=qmask)
+            if stats:
+                stats.merge(shard_stats)
             s, i = ops.retrieval_topk_merge(
                 board_s, board_i, qmask & searched[None, :], top_k,
                 impl=impl)

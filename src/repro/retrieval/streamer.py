@@ -24,6 +24,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.core.prefetch import PrefetchPolicy
+from repro.obs.trace import NULL_TRACER
 from repro.retrieval.vectorstore import SearchStats, VectorStore
 
 
@@ -32,8 +33,10 @@ class PartitionStreamer:
 
     def __init__(self, store: VectorStore,
                  policy: Optional[PrefetchPolicy] = None,
-                 free_bytes: float = float("inf")):
+                 free_bytes: float = float("inf"),
+                 tracer=None):
         self.store = store
+        self.tracer = tracer or NULL_TRACER
         # double buffer by default: one partition in flight while one is
         # being searched; a looser memory budget deepens the queue
         self.policy = policy or PrefetchPolicy(max_depth=2, prefill_depth=1)
@@ -93,11 +96,18 @@ class PartitionStreamer:
         nothing, so it is a plain load, not a prefetch.
         """
         inflight: Dict[int, Optional[Tuple[Future, bool]]] = {}
+        tracer = self.tracer
+        # Trace-id scope is thread-local; capture the sweep's ids here so
+        # load spans emitted on the I/O thread still tag the requests
+        # whose sweep triggered them.
+        trace_ids = list(tracer.current_scope()) if tracer.enabled else []
 
-        def fetch(path: str):
-            t0 = time.perf_counter()
-            arr = np.load(path)
-            return arr, time.perf_counter() - t0
+        def fetch(pid: int, path: str, lookahead: bool):
+            with tracer.span("partition.load", pid=pid,
+                             prefetch=lookahead, trace_ids=trace_ids):
+                t0 = time.perf_counter()
+                arr = np.load(path)
+                return arr, time.perf_counter() - t0
 
         def ensure(idx: int, lookahead: bool) -> None:
             if idx >= len(pids) or idx in inflight:
@@ -107,7 +117,8 @@ class PartitionStreamer:
                 inflight[idx] = None
             else:
                 try:
-                    inflight[idx] = (self._pool.submit(fetch, p.path),
+                    inflight[idx] = (self._pool.submit(fetch, pids[idx],
+                                                       p.path, lookahead),
                                      lookahead)
                 except RuntimeError:    # closed streamer: degrade to sync
                     inflight[idx] = None
@@ -132,9 +143,8 @@ class PartitionStreamer:
                 p.embeddings = arr
                 p.nbytes_cached = int(arr.nbytes)
                 if stats:
-                    stats.partitions_loaded += 1
-                    stats.load_seconds += dt
-                    stats.prefetched += int(was_lookahead)
+                    stats.add(partitions_loaded=1, load_seconds=dt,
+                              prefetched=int(was_lookahead))
                     stats.record_load(pid, dt)
             yield pid, not overlapped
 

@@ -86,6 +86,62 @@ class SearchStats:
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False, compare=False)
 
+    # Scalar-counter fields, used by add()/merge()/snapshot()/reset().
+    # One tuple so the aggregation API cannot drift from the field list.
+    _SCALARS = ("partitions_searched", "partitions_loaded",
+                "partitions_pruned", "prefetched", "load_seconds",
+                "search_seconds", "hot_hits", "cache_hits", "cache_misses")
+
+    def add(self, **deltas: float) -> None:
+        """Locked increment of one or more scalar counters — the single
+        write path for sweep/streamer/cache accounting (previously bare
+        ``stats.x += n`` sprinkled across three modules, which races and
+        drifts once multiple shard sweeps share a stats object)."""
+        with self._lock:
+            for name, dv in deltas.items():
+                if name not in self._SCALARS:
+                    raise AttributeError(f"unknown SearchStats counter "
+                                         f"{name!r}")
+                setattr(self, name, getattr(self, name) + dv)
+
+    def merge(self, other: "SearchStats") -> None:
+        """Fold another stats object into this one, conserving totals:
+        scalar counters sum, per-partition probe counts sum, and load
+        EWMAs take the other side's sample where both observed a
+        partition (most-recent-wins matches record_load's 0.5/0.5 lean
+        toward fresh observations)."""
+        with other._lock:
+            scalars = {n: getattr(other, n) for n in self._SCALARS}
+            hits = dict(other.hit_counts)
+            ewma = dict(other.load_ewma)
+        with self._lock:
+            for name, v in scalars.items():
+                setattr(self, name, getattr(self, name) + v)
+            for pid, c in hits.items():
+                self.hit_counts[pid] = self.hit_counts.get(pid, 0.0) + c
+            for pid, dt in ewma.items():
+                prev = self.load_ewma.get(pid)
+                self.load_ewma[pid] = dt if prev is None \
+                    else 0.5 * prev + 0.5 * dt
+
+    def snapshot(self) -> Dict[str, float]:
+        """Locked point-in-time copy of the scalar counters plus the
+        derived rates (JSON-safe; feeds MetricsRegistry sync)."""
+        with self._lock:
+            snap = {n: getattr(self, n) for n in self._SCALARS}
+            searched = snap["partitions_searched"]
+            c_hits, c_miss = snap["cache_hits"], snap["cache_misses"]
+        snap["hot_hit_rate"] = snap["hot_hits"] / max(searched, 1)
+        snap["cache_hit_rate"] = c_hits / max(c_hits + c_miss, 1)
+        return snap
+
+    def reset(self) -> None:
+        """Zero the scalar counters; per-partition heat/EWMA state is
+        kept (it is policy state aged by decay(), not accounting)."""
+        with self._lock:
+            for name in self._SCALARS:
+                setattr(self, name, type(getattr(self, name))(0))
+
     def record_search(self, pid: int, weight: float = 1.0) -> None:
         """Bump the partition's probe count.  ``weight`` is the number of
         queries in the batch that probed it — per-query votes, not
@@ -357,7 +413,7 @@ class VectorStore:
             qmask = np.zeros((nq, self.num_partitions), bool)
             qmask[:, pids] = True
         if stats:
-            stats.partitions_pruned += self.num_partitions - len(pids)
+            stats.add(partitions_pruned=self.num_partitions - len(pids))
 
         board_s, board_i, searched = self.sweep_boards(
             queries, pids, top_k, impl=impl, streamer=streamer, stats=stats,
@@ -425,9 +481,8 @@ class VectorStore:
                 board_i[:, pid, :k_eff] = doc_ids[np.asarray(i)]
             searched[pid] = True
             if stats:
-                stats.search_seconds += time.perf_counter() - t0
-                stats.partitions_searched += 1
-                stats.hot_hits += 1
+                stats.add(search_seconds=time.perf_counter() - t0,
+                          partitions_searched=1, hot_hits=1)
                 stats.record_search(pid, heat_w(pid))
         cold_pids = [pid for pid in pids if pid not in hot_entries]
 
@@ -442,8 +497,8 @@ class VectorStore:
                         dt = self.load(pid)
                         loaded_here = True
                         if stats:
-                            stats.partitions_loaded += 1
-                            stats.load_seconds += dt
+                            stats.add(partitions_loaded=1,
+                                      load_seconds=dt)
                             stats.record_load(pid, dt)
                     yield pid, loaded_here
 
@@ -455,8 +510,7 @@ class VectorStore:
                     dt = self.load(pid)
                     loaded_here = True
                     if stats:
-                        stats.partitions_loaded += 1
-                        stats.load_seconds += dt
+                        stats.add(partitions_loaded=1, load_seconds=dt)
                         stats.record_load(pid, dt)
                 if loaded_here:
                     loaded_pending.add(pid)
@@ -469,8 +523,8 @@ class VectorStore:
                     board_i[:, pid, :k_eff] = p.doc_ids[np.asarray(i)]
                 searched[pid] = True
                 if stats:
-                    stats.search_seconds += time.perf_counter() - t0
-                    stats.partitions_searched += 1
+                    stats.add(search_seconds=time.perf_counter() - t0,
+                              partitions_searched=1)
                     stats.record_search(pid, heat_w(pid))
                 if loaded_here:
                     self.release(pid)

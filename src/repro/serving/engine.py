@@ -34,6 +34,7 @@ worker retrieves then generates per batch, in arrival order.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from dataclasses import dataclass, field
@@ -46,6 +47,8 @@ from repro.core.pipeline import (Pipeline, PipelineWorker, StageQueue,
 from repro.core.placement import Placement, PlacementOptimizer
 from repro.core.prefetch import PrefetchPolicy
 from repro.core.scheduler import BacklogScheduler
+from repro.obs.metrics import MetricsRegistry, NULL_REGISTRY
+from repro.obs.trace import NULL_TRACER
 from repro.retrieval.cache import HotPartitionSet, PartitionCache
 from repro.retrieval.embedding import HashEmbedder
 from repro.retrieval.streamer import PartitionStreamer
@@ -82,19 +85,38 @@ class RagdollEngine:
                  initial_partitions: Optional[int] = None,
                  streamer: Optional[PartitionStreamer] = None,
                  policy_every: int = 8,
-                 retrieval_shards: int = 1):
+                 retrieval_shards: int = 1,
+                 tracer=None, registry=None):
         self.store = store
         self.embedder = embedder
         self.generator = generator
         self.continuous = isinstance(generator, ContinuousGenerator)
         self.policy_every = policy_every
         self.opt = optimizer
+        self.tracer = tracer or NULL_TRACER
+        # the engine's registry defaults to a REAL per-engine registry
+        # (not the global no-op): policy-boundary decisions journal
+        # through it, and ``policy_trace`` reads them back
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        if self.opt is not None:
+            # hand the engine's obs plumbing down unless the caller
+            # wired the optimizer to its own
+            if self.opt.tracer is NULL_TRACER:
+                self.opt.tracer = self.tracer
+            if self.opt.registry is NULL_REGISTRY:
+                self.opt.registry = self.registry
+        if hasattr(generator, "bind_obs"):
+            generator.bind_obs(self.tracer, self.registry)
         p0 = (initial_partitions if initial_partitions is not None
               else len(store.partitions))
         self.pcache = PartitionCache(store, target=p0)
         self._owns_streamer = streamer is None
         self.streamer = streamer if streamer is not None else \
-            PartitionStreamer(store, PrefetchPolicy(max_depth=2))
+            PartitionStreamer(store, PrefetchPolicy(max_depth=2),
+                              tracer=self.tracer)
+        if not self._owns_streamer and self.streamer.tracer is NULL_TRACER:
+            self.streamer.tracer = self.tracer
         # sharded IVF retrieval: partition the store across S shards,
         # each with its own streamer/disk tier; the policy boundary
         # splits the host headroom across them (the single streamer
@@ -102,16 +124,20 @@ class RagdollEngine:
         self.sharded: Optional["ShardedIVFStore"] = None
         if retrieval_shards > 1:
             from repro.retrieval.distributed import ShardedIVFStore
-            self.sharded = ShardedIVFStore(store, retrieval_shards)
+            self.sharded = ShardedIVFStore(store, retrieval_shards,
+                                           tracer=self.tracer,
+                                           registry=self.registry)
         # device-hot partition tier for the S=1 path (each shard of a
         # sharded store owns its own).  Inert (budget 0) until the
         # device-byte market grants it bytes at a policy boundary.
-        self.hot = HotPartitionSet(store)
+        self.hot = HotPartitionSet(store, tracer=self.tracer,
+                                   registry=self.registry)
         self.nprobe: Optional[int] = None   # set by the placement policy
-        self.policy_trace: List[PolicyEvent] = []
         self.retrieval_stats = SearchStats()   # cumulative, for reporting
         self.completed: List[Request] = []
         self._done_lock = threading.Lock()
+        # open async "request" spans (submit -> harvest), keyed by rid
+        self._req_spans: Dict[int, object] = {}
         if self.continuous:
             rq, cq, dq = (StageQueue("retrieval"), StageQueue("context"),
                           StageQueue("done"))
@@ -138,33 +164,62 @@ class RagdollEngine:
 
     # ------------------------------------------------------------- stages
     def _retrieve_batch(self, reqs: List[Request]) -> List[Request]:
-        t0 = time.perf_counter()
-        queries = self.embedder.embed([r.query for r in reqs])
-        # IVF probe prunes the sweep; resident partitions answer from RAM
-        # and the streamer double-buffers the remaining disk loads
-        stats = self.retrieval_stats
-        if self.sharded is not None:
-            scores, ids = self.sharded.search(
-                queries, reqs[0].top_k, nprobe=self.nprobe, stats=stats)
-        else:
-            scores, ids = self.store.search(
-                queries, reqs[0].top_k, nprobe=self.nprobe,
-                streamer=self.streamer, stats=stats, hot=self.hot)
-        chunks = self.store.get_chunks(ids)
-        t1 = time.perf_counter()
+        # the ambient scope tags every span the sweep emits (partition
+        # loads on the streamer's IO thread capture it at submit time)
+        # with the rids of the requests being answered
+        with self.tracer.scope(*(r.rid for r in reqs)), \
+                self.tracer.span("retrieve.batch", batch=len(reqs)):
+            t0 = time.perf_counter()
+            with self.tracer.span("embed", batch=len(reqs)):
+                queries = self.embedder.embed([r.query for r in reqs])
+            # IVF probe prunes the sweep; resident partitions answer from
+            # RAM and the streamer double-buffers the remaining disk loads
+            stats = self.retrieval_stats
+            with self.tracer.span("search", top_k=reqs[0].top_k):
+                if self.sharded is not None:
+                    scores, ids = self.sharded.search(
+                        queries, reqs[0].top_k, nprobe=self.nprobe,
+                        stats=stats)
+                else:
+                    scores, ids = self.store.search(
+                        queries, reqs[0].top_k, nprobe=self.nprobe,
+                        streamer=self.streamer, stats=stats, hot=self.hot)
+            chunks = self.store.get_chunks(ids)
+            t1 = time.perf_counter()
+        if self.registry.enabled:
+            self.registry.counter("engine.retrieve_batches").inc()
+            self.registry.histogram("retrieve.seconds").observe(t1 - t0)
         for r, ch in zip(reqs, chunks):
             r.retrieved = ch
             r.prompt = " ".join(ch) + " " + r.query
             r.t_ret_start, r.t_ret_end = t0, t1
         return reqs
 
+    def _harvest_obs(self, done: List[Request]) -> None:
+        """Close each finished request's async span, record latencies."""
+        for r in done:
+            self.tracer.end(self._req_spans.pop(r.rid, None))
+        if not self.registry.enabled:
+            return
+        self.registry.counter("engine.completed").inc(len(done))
+        lat = self.registry.histogram("request.latency_seconds")
+        wait = self.registry.histogram("request.waiting_seconds")
+        for r in done:
+            if not r.complete:      # partially timestamped: EOS before
+                continue            # t_gen_start, or harvested mid-stage
+            lat.observe(r.latency)
+            wait.observe(r.waiting)
+
     def _generate_batch(self, reqs: List[Request]) -> List[Request]:
         t0 = time.perf_counter()
-        outs = self.generator.generate([r.prompt for r in reqs])
+        with self.tracer.span("generate.batch", batch=len(reqs),
+                              trace_ids=[r.rid for r in reqs]):
+            outs = self.generator.generate([r.prompt for r in reqs])
         t1 = time.perf_counter()
         for r, o in zip(reqs, outs):
             r.output = o
             r.t_gen_start, r.t_gen_end = t0, t1
+        self._harvest_obs(reqs)
         with self._done_lock:
             self.completed.extend(reqs)
         return reqs
@@ -230,9 +285,13 @@ class RagdollEngine:
         """
         t = time.perf_counter()
         for i, r in enumerate(reqs):
-            ref = self.generator.join(r, r.prompt, r.max_new_tokens)
-            while ref is None and self._preempt_for_join():
+            # scope the join so the generator maps the slot to this rid
+            # and the prefill span lands on the request's timeline
+            with self.tracer.scope(r.rid):
                 ref = self.generator.join(r, r.prompt, r.max_new_tokens)
+                while ref is None and self._preempt_for_join():
+                    ref = self.generator.join(r, r.prompt,
+                                              r.max_new_tokens)
             if ref is None:
                 self.pipeline.context_queue.requeue(reqs[i:])
                 return
@@ -254,12 +313,15 @@ class RagdollEngine:
             # per-step durations steer choose_batch exactly like the
             # whole-batch samples PipelineWorker.observe() would
             self.gen_scheduler.observe(stepped, t - t0)
+        if stepped and self.registry.enabled:
+            self.registry.histogram("decode.step_seconds").observe(t - t0)
         done: List[Request] = []
         for req, text, _tokens in finished:
             req.output = text
             req.t_gen_end = t
             done.append(req)
         if done:
+            self._harvest_obs(done)
             with self._done_lock:
                 self.completed.extend(done)
         return done
@@ -339,7 +401,10 @@ class RagdollEngine:
                 host_free, self.sharded.num_shards))
         else:
             self.streamer.set_budget(max(host_free, 0.0))
-        self.policy_trace.append(PolicyEvent(
+        # policy decisions journal through the metrics registry as
+        # structured events (``policy_trace`` reads them back as
+        # ``PolicyEvent`` rows for the Fig. 9 plots and tests)
+        ev = PolicyEvent(
             t=time.perf_counter(), gen_batch=b,
             resident_partitions=placement.resident_partitions,
             c_gpu=placement.c_gpu, w_gpu=placement.w_gpu,
@@ -352,7 +417,58 @@ class RagdollEngine:
             prefix_hit_tokens=getattr(self.generator, "prefix_hit_tokens",
                                       None),
             hot_partitions=hot_parts, hot_bytes=hot_bytes,
-            hot_hit_rate=stats.hot_hit_rate))
+            hot_hit_rate=stats.hot_hit_rate)
+        self.registry.event("policy", **dataclasses.asdict(ev))
+        self.tracer.instant("policy.boundary", gen_batch=b,
+                            nprobe=placement.nprobe)
+
+    @property
+    def policy_trace(self) -> List[PolicyEvent]:
+        """Policy-boundary decisions, oldest first (from the registry's
+        event journal — bounded, so very long runs keep the tail)."""
+        return [PolicyEvent(**{k: v for k, v in e.items()
+                               if k not in ("seq", "kind")})
+                for e in self.registry.events("policy")]
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """One coherent dict of every subsystem's counters: sync the
+        pull-style sources (search stats, prefix cache, pools, slots)
+        into registry gauges, then snapshot."""
+        reg = self.registry
+        if reg.enabled:
+            for name, val in self.retrieval_stats.snapshot().items():
+                reg.gauge(f"search.{name}").set(float(val))
+            gen = self.generator
+            for name in ("active_slots", "parked_slots", "peak_in_flight",
+                         "prefix_hit_tokens"):
+                val = getattr(gen, name, None)
+                if val is not None:
+                    reg.gauge(f"gen.{name}").set(float(val))
+            kv = getattr(gen, "kv", None)
+            if kv is not None:
+                pool = getattr(kv, "pool", None)
+                if pool is not None:
+                    reg.gauge("kv.pages_used").set(
+                        float(pool.used_pages))
+                    reg.gauge("kv.pages_capacity").set(
+                        float(pool.capacity))
+                host = getattr(kv, "host", None)
+                if host is not None:
+                    reg.gauge("kv.host_pages_used").set(
+                        float(host.used_pages))
+                    reg.gauge("kv.host_pages_capacity").set(
+                        float(host.capacity))
+            prefix = getattr(gen, "prefix", None)
+            if prefix is not None:
+                for name, val in dataclasses.asdict(
+                        prefix.stats).items():
+                    reg.gauge(f"prefix.{name}").set(float(val))
+            reg.gauge("hot.partitions").set(
+                float(len(self.sharded.hot_partitions())
+                      if self.sharded is not None else len(self.hot)))
+            reg.gauge("engine.completed_total").set(
+                float(len(self.completed)))
+        return reg.snapshot()
 
     # ------------------------------------------------------------- public
     def pump_once(self) -> int:
@@ -391,6 +507,11 @@ class RagdollEngine:
     def submit(self, req: Request) -> None:
         req.arrival = time.perf_counter() if req.arrival is None \
             else req.arrival
+        if self.tracer.enabled:
+            # async span: spans submit -> harvest across the retrieval
+            # and generation threads, keyed by rid in the trace viewer
+            self._req_spans[req.rid] = self.tracer.begin(
+                "request", rid=req.rid, trace_ids=[req.rid])
         self.pipeline.retrieval_queue.put(req)
 
     def drain(self, n: int, timeout: float = 120.0) -> List[Request]:

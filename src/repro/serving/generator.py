@@ -47,6 +47,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.prefetch import PrefetchPolicy, StreamedExecutor
 from repro.models.model import Model, init_cache
+from repro.obs.metrics import NULL_REGISTRY
+from repro.obs.trace import NULL_SPAN, NULL_TRACER
 from repro.serving import kvpool
 from repro.serving.kvpool import PagedKVCache
 from repro.serving.prefixcache import PrefixCache
@@ -313,6 +315,7 @@ class _Parked:
     remaining: int            # decode budget left
     cur: int                  # pending token awaiting its KV write
     dec_pos: int              # _pos value: the next decode position
+    trace_ids: Tuple = ()     # request trace scope, restored on resume
 
 
 class ContinuousGenerator(_GeneratorBase):
@@ -374,9 +377,16 @@ class ContinuousGenerator(_GeneratorBase):
                  prefill_chunk: Optional[int] = None,
                  host_page_budget: Optional[int] = None,
                  prefix_cache: bool = False,
-                 prefix_page_budget: Optional[int] = None):
+                 prefix_page_budget: Optional[int] = None,
+                 tracer=None, registry=None):
         super().__init__(cfg, params, gen_cfg, streamed=streamed,
                          policy=policy)
+        self.tracer = tracer or NULL_TRACER
+        self.registry = registry or NULL_REGISTRY
+        # slot -> the joining request's trace-id scope, so decode/swap
+        # spans (which run outside the engine's per-request scope) can
+        # still tag the requests they advance
+        self._slot_scope: Dict[int, Tuple] = {}
         self.num_slots = num_slots
         self.table = SlotTable(num_slots)
         total = gen_cfg.ctx_len + gen_cfg.max_new_tokens
@@ -404,7 +414,8 @@ class ContinuousGenerator(_GeneratorBase):
         if paged:
             self.kv: Optional[PagedKVCache] = PagedKVCache(
                 cfg, num_slots, total, page_size, num_pages=page_budget,
-                dtype=gen_cfg.dtype, host_pages=host_page_budget)
+                dtype=gen_cfg.dtype, host_pages=host_page_budget,
+                tracer=self.tracer, registry=self.registry)
             if streamed:
                 self.caches = self.kv.init_layered(self.exec.layer_kinds())
             else:
@@ -432,6 +443,27 @@ class ContinuousGenerator(_GeneratorBase):
         self.steps = 0
 
     # ------------------------------------------------------------ helpers
+    def bind_obs(self, tracer=None, registry=None) -> None:
+        """Late-bind observability: the engine owns the tracer/registry
+        but receives an already-constructed generator, so it hands them
+        down here (and into the paged KV cache) at startup."""
+        if tracer is not None:
+            self.tracer = tracer
+            if self.kv is not None:
+                self.kv.tracer = tracer
+        if registry is not None:
+            self.registry = registry
+            if self.kv is not None:
+                self.kv.registry = registry
+
+    def _scope_ids(self, slots) -> List:
+        """Union of the given slots' request trace ids (sorted, so span
+        attrs are deterministic)."""
+        ids = set()
+        for s in slots:
+            ids.update(self._slot_scope.get(s, ()))
+        return sorted(ids, key=str)
+
     @property
     def free_slots(self) -> int:
         return self.table.free_slots
@@ -505,6 +537,7 @@ class ContinuousGenerator(_GeneratorBase):
             # page, so the parked writes can never hit a reissued page
             if self.paged:
                 self.kv.release(ref.index)
+            self._slot_scope.pop(ref.index, None)
             self._finished.append(
                 (st.key, self.tok.decode(st.tokens), list(st.tokens)))
 
@@ -551,6 +584,8 @@ class ContinuousGenerator(_GeneratorBase):
         self.joins += 1
         self.prefill_tokens += g.ctx_len - matched
         self.peak_in_flight = max(self.peak_in_flight, self.in_flight)
+        if self.tracer.enabled:
+            self._slot_scope[ref.index] = self.tracer.current_scope()
         if self.prefill_chunk is not None:
             # park decode writes on the last position: its page is either
             # unallocated (-> trash) or self-overwritten by the final
@@ -564,37 +599,41 @@ class ContinuousGenerator(_GeneratorBase):
         if matched > 0:
             # suffix-only prefill through the block table (the shared
             # prefix pages supply positions [0, matched) to attention)
-            self.kv.ensure(ref.index, g.ctx_len)
-            chunk = jnp.asarray(ptoks[None, matched:])
-            off = jnp.full((1,), matched, jnp.int32)
-            bt = self.kv.slot_tab(ref.index)
-            if self.streamed:
-                logits, self.caches = self.exec.prefill_chunk(
-                    chunk, self.caches, off, block_tab=bt,
-                    kv_span=g.ctx_len)
-            else:
-                logits, self.cache = self._chunk_paged(
-                    self.params, chunk, self.cache, off, bt)
+            with self.tracer.span("prefill", slot=ref.index,
+                                  tokens=g.ctx_len - matched,
+                                  matched=matched):
+                self.kv.ensure(ref.index, g.ctx_len)
+                chunk = jnp.asarray(ptoks[None, matched:])
+                off = jnp.full((1,), matched, jnp.int32)
+                bt = self.kv.slot_tab(ref.index)
+                if self.streamed:
+                    logits, self.caches = self.exec.prefill_chunk(
+                        chunk, self.caches, off, block_tab=bt,
+                        kv_span=g.ctx_len)
+                else:
+                    logits, self.cache = self._chunk_paged(
+                        self.params, chunk, self.cache, off, bt)
             self._prefix_insert(ref.index, ptoks)
             self._emit(ref, int(np.asarray(jnp.argmax(logits, -1))[0]))
             return ref
-        toks = jnp.asarray(ptoks[None])
-        if self.streamed:
-            row = self.exec.init_caches(1, self._total, g.dtype)
-            logits, row = self.exec.prefill(toks, row)
-            if self.paged:
-                self.caches = self.kv.scatter_row_layered(
-                    self.caches, row, ref.index, g.ctx_len)
+        with self.tracer.span("prefill", slot=ref.index, tokens=g.ctx_len):
+            toks = jnp.asarray(ptoks[None])
+            if self.streamed:
+                row = self.exec.init_caches(1, self._total, g.dtype)
+                logits, row = self.exec.prefill(toks, row)
+                if self.paged:
+                    self.caches = self.kv.scatter_row_layered(
+                        self.caches, row, ref.index, g.ctx_len)
+                else:
+                    self._scatter_row(row, ref.index)
             else:
-                self._scatter_row(row, ref.index)
-        else:
-            row = init_cache(self.cfg, 1, self._total, g.dtype)
-            logits, row = self._prefill(self.params, toks, row)
-            if self.paged:
-                self.cache = self.kv.scatter_row_stacked(
-                    self.cache, row, ref.index, g.ctx_len)
-            else:
-                self._scatter_row(row, ref.index)
+                row = init_cache(self.cfg, 1, self._total, g.dtype)
+                logits, row = self._prefill(self.params, toks, row)
+                if self.paged:
+                    self.cache = self.kv.scatter_row_stacked(
+                        self.cache, row, ref.index, g.ctx_len)
+                else:
+                    self._scatter_row(row, ref.index)
         if self.paged:
             self._prefix_insert(ref.index, ptoks)
         self._emit(ref, int(np.asarray(jnp.argmax(logits, axis=-1))[0]))
@@ -711,45 +750,52 @@ class ContinuousGenerator(_GeneratorBase):
             c = min(self.prefill_chunk, g.ctx_len - job.offset)
             groups.setdefault(c, []).append((slot, job))
         finished: List[Tuple[int, int]] = []
-        for c, members in sorted(groups.items()):
-            for slot, job in members:
-                self.kv.ensure(slot, job.offset + c)
-            tab = self.kv.device_tab()
-            if not self.streamed:
+        span = (self.tracer.span(
+                    "prefill.chunk", slots=len(self._prefilling),
+                    trace_ids=self._scope_ids(self._prefilling))
+                if self.tracer.enabled else NULL_SPAN)
+        with span:
+            for c, members in sorted(groups.items()):
                 for slot, job in members:
-                    chunk = jnp.asarray(
-                        job.toks[None, job.offset:job.offset + c])
-                    off = jnp.full((1,), job.offset, jnp.int32)
-                    logits, self.cache = self._chunk_paged(
-                        self.params, chunk, self.cache, off,
-                        tab[slot:slot + 1])
+                    self.kv.ensure(slot, job.offset + c)
+                tab = self.kv.device_tab()
+                if not self.streamed:
+                    for slot, job in members:
+                        chunk = jnp.asarray(
+                            job.toks[None, job.offset:job.offset + c])
+                        off = jnp.full((1,), job.offset, jnp.int32)
+                        logits, self.cache = self._chunk_paged(
+                            self.params, chunk, self.cache, off,
+                            tab[slot:slot + 1])
+                        job.offset += c
+                        if job.offset >= g.ctx_len:
+                            finished.append(
+                                (slot,
+                                 int(np.asarray(jnp.argmax(logits,
+                                                           -1))[0])))
+                    continue
+                n = len(members)
+                padn = 1 << (n - 1).bit_length()
+                rows = np.stack([job.toks[job.offset:job.offset + c]
+                                 for _, job in members])
+                offs = [job.offset for _, job in members]
+                bt = tab[jnp.asarray([slot for slot, _ in members])]
+                if padn > n:    # pad rows write to trash, logits ignored
+                    rows = np.concatenate(
+                        [rows, np.zeros((padn - n, c), rows.dtype)])
+                    offs = offs + [0] * (padn - n)
+                    bt = jnp.concatenate(
+                        [bt, jnp.zeros((padn - n, self.kv.nmax),
+                                       jnp.int32)])
+                logits, self.caches = self.exec.prefill_chunk(
+                    jnp.asarray(rows), self.caches,
+                    jnp.asarray(offs, jnp.int32), block_tab=bt,
+                    kv_span=g.ctx_len)
+                nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                for i, (slot, job) in enumerate(members):
                     job.offset += c
                     if job.offset >= g.ctx_len:
-                        finished.append(
-                            (slot,
-                             int(np.asarray(jnp.argmax(logits, -1))[0])))
-                continue
-            n = len(members)
-            padn = 1 << (n - 1).bit_length()
-            rows = np.stack([job.toks[job.offset:job.offset + c]
-                             for _, job in members])
-            offs = [job.offset for _, job in members]
-            bt = tab[jnp.asarray([slot for slot, _ in members])]
-            if padn > n:        # pad rows write to trash, logits ignored
-                rows = np.concatenate(
-                    [rows, np.zeros((padn - n, c), rows.dtype)])
-                offs = offs + [0] * (padn - n)
-                bt = jnp.concatenate(
-                    [bt, jnp.zeros((padn - n, self.kv.nmax), jnp.int32)])
-            logits, self.caches = self.exec.prefill_chunk(
-                jnp.asarray(rows), self.caches,
-                jnp.asarray(offs, jnp.int32), block_tab=bt,
-                kv_span=g.ctx_len)
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            for i, (slot, job) in enumerate(members):
-                job.offset += c
-                if job.offset >= g.ctx_len:
-                    finished.append((slot, int(nxt[i])))
+                        finished.append((slot, int(nxt[i])))
         progressed = len(self._prefilling)
         for slot, token in finished:
             job = self._prefilling.pop(slot)
@@ -781,28 +827,34 @@ class ContinuousGenerator(_GeneratorBase):
             for ref in refs:
                 self.kv.ensure(ref.index, int(self._pos[ref.index]) + 1)
             bt = self.kv.device_tab()
-        cur = jnp.asarray(self._cur)[:, None]
-        pos = jnp.asarray(self._pos)
-        if self.streamed:
-            mask = self.table.mask()
-            for slot in self._prefilling:       # still prefilling != live
-                mask[slot] = False
-            mask = jnp.asarray(mask)
-            if self.paged:
-                logits, self.caches = self.exec.decode(
-                    cur, self.caches, pos, slot_mask=mask, block_tab=bt,
-                    kv_span=self._total)
+        span = (self.tracer.span(
+                    "decode.step", slots=len(refs),
+                    trace_ids=self._scope_ids(r.index for r in refs))
+                if self.tracer.enabled else NULL_SPAN)
+        with span:
+            cur = jnp.asarray(self._cur)[:, None]
+            pos = jnp.asarray(self._pos)
+            if self.streamed:
+                mask = self.table.mask()
+                for slot in self._prefilling:   # still prefilling != live
+                    mask[slot] = False
+                mask = jnp.asarray(mask)
+                if self.paged:
+                    logits, self.caches = self.exec.decode(
+                        cur, self.caches, pos, slot_mask=mask,
+                        block_tab=bt, kv_span=self._total)
+                else:
+                    logits, self.caches = self.exec.decode(
+                        cur, self.caches, pos, slot_mask=mask)
             else:
-                logits, self.caches = self.exec.decode(cur, self.caches,
-                                                       pos, slot_mask=mask)
-        else:
-            if self.paged:
-                logits, self.cache = self._decode_paged(
-                    self.params, cur, self.cache, pos, bt)
-            else:
-                logits, self.cache = self._decode(self.params, cur,
-                                                  self.cache, pos)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+                if self.paged:
+                    logits, self.cache = self._decode_paged(
+                        self.params, cur, self.cache, pos, bt)
+                else:
+                    logits, self.cache = self._decode(self.params, cur,
+                                                      self.cache, pos)
+            nxt = np.asarray(jnp.argmax(logits,
+                                        axis=-1)).astype(np.int32)
         for ref in refs:
             self._emit(ref, int(nxt[ref.index]))
         self.steps += 1
@@ -853,13 +905,19 @@ class ContinuousGenerator(_GeneratorBase):
             return None
         handle = _park_handle(st.key)
         pools = self.caches if self.streamed else self.cache
-        if not self.kv.swap_out(pools, ref.index, handle):
-            return None                          # host pool exhausted
-        st = self.table.release(ref)
+        scope = self._slot_scope.get(ref.index, ())
+        span = (self.tracer.span("swap.preempt", slot=ref.index,
+                                 trace_ids=list(scope))
+                if self.tracer.enabled else NULL_SPAN)
+        with span:
+            if not self.kv.swap_out(pools, ref.index, handle):
+                return None                      # host pool exhausted
+            st = self.table.release(ref)
+        self._slot_scope.pop(ref.index, None)
         self._parked[handle] = _Parked(
             key=st.key, tokens=list(st.tokens), pos=st.pos,
             remaining=st.remaining, cur=int(self._cur[ref.index]),
-            dec_pos=int(self._pos[ref.index]))
+            dec_pos=int(self._pos[ref.index]), trace_ids=tuple(scope))
         # the freed row keeps riding the batched decode like any dead
         # slot; its block-table row now points at the trash page, so the
         # parked writes can never land in a page re-issued to a joiner
@@ -879,14 +937,20 @@ class ContinuousGenerator(_GeneratorBase):
         if ref is None:
             return None
         pools = self.caches if self.streamed else self.cache
-        new_pools = self.kv.swap_in(pools, ref.index, key)
-        if new_pools is None:
-            self.table.release(ref)              # pages still exhausted
-            return None
+        span = (self.tracer.span("swap.resume", slot=ref.index,
+                                 trace_ids=list(parked.trace_ids))
+                if self.tracer.enabled else NULL_SPAN)
+        with span:
+            new_pools = self.kv.swap_in(pools, ref.index, key)
+            if new_pools is None:
+                self.table.release(ref)          # pages still exhausted
+                return None
         if self.streamed:
             self.caches = new_pools
         else:
             self.cache = new_pools
+        if self.tracer.enabled and parked.trace_ids:
+            self._slot_scope[ref.index] = parked.trace_ids
         self.table.state(ref).tokens.extend(parked.tokens)
         self._cur[ref.index] = parked.cur
         self._pos[ref.index] = parked.dec_pos

@@ -86,6 +86,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.obs.metrics import NULL_REGISTRY
+from repro.obs.trace import NULL_TRACER
 
 TRASH_PAGE = 0
 
@@ -605,7 +607,8 @@ class PagedKVCache:
 
     def __init__(self, cfg: ModelConfig, num_slots: int, total_len: int,
                  page_size: int, num_pages: Optional[int] = None,
-                 dtype=jnp.float32, host_pages: Optional[int] = None):
+                 dtype=jnp.float32, host_pages: Optional[int] = None,
+                 tracer=None, registry=None):
         _attn_only_kinds(cfg)
         self.cfg = cfg
         self.num_slots = num_slots
@@ -619,8 +622,23 @@ class PagedKVCache:
         self.host = HostPagePool(worst if host_pages is None else host_pages,
                                  page_size)
         self.dtype = dtype
+        self.tracer = tracer or NULL_TRACER
+        self.registry = registry or NULL_REGISTRY
+        self._page_nbytes: Optional[int] = None
         self._tab = np.zeros((num_slots, self.nmax), np.int32)  # TRASH_PAGE
         self._tab_dev: Optional[jnp.ndarray] = None
+
+    def page_nbytes(self, pools) -> int:
+        """Physical bytes one page occupies across every pool leaf
+        (lazy: derived from the live arrays on first use, so it tracks
+        whatever dtype/layout the caller actually allocated)."""
+        if self._page_nbytes is None:
+            total = 0
+            for leaf, axis in _pool_leaves(pools):
+                total += leaf.dtype.itemsize * (
+                    int(np.prod(leaf.shape)) // leaf.shape[axis])
+            self._page_nbytes = total
+        return self._page_nbytes
 
     # ------------------------------------------------------ array builders
     @property
@@ -708,7 +726,9 @@ class PagedKVCache:
         if res is None:
             return pools, False
         src, dst = res
-        pools = self.copy_page(pools, src, dst)
+        with self.tracer.span("kv.cow_copy", slot=slot, block=block):
+            pools = self.copy_page(pools, src, dst)
+        self.registry.counter("kv.cow_copies").inc()
         self._tab[slot, block] = dst
         self._tab_dev = None
         return pools, True
@@ -730,10 +750,14 @@ class PagedKVCache:
                                reserve=self.pool.reservation(slot))
         if hp is None:
             return False
-        self.host.store(pools, handle, dev)      # D2H before pages recycle
-        self.pool.swap_out(slot)
-        self._tab[slot, :] = TRASH_PAGE
-        self._tab_dev = None
+        with self.tracer.span("swap.out", slot=slot, pages=len(dev)):
+            self.host.store(pools, handle, dev)  # D2H before pages recycle
+            self.pool.swap_out(slot)
+            self._tab[slot, :] = TRASH_PAGE
+            self._tab_dev = None
+        self.registry.counter("kv.swap_out_pages").inc(len(dev))
+        self.registry.counter("kv.swap_out_bytes").inc(
+            len(dev) * self.page_nbytes(pools))
         return True
 
     def swap_in(self, pools, slot: int, handle: Any):
@@ -747,11 +771,15 @@ class PagedKVCache:
         new = self.pool.swap_in(slot, blocks, self.host.reservation(handle))
         if new is None:
             return None
-        pools = self.host.load(pools, handle, new)
-        self.host.release(handle)
-        self._tab[slot, :] = TRASH_PAGE
-        self._tab[slot, :blocks] = new
-        self._tab_dev = None
+        with self.tracer.span("swap.in", slot=slot, pages=blocks):
+            pools = self.host.load(pools, handle, new)
+            self.host.release(handle)
+            self._tab[slot, :] = TRASH_PAGE
+            self._tab[slot, :blocks] = new
+            self._tab_dev = None
+        self.registry.counter("kv.swap_in_pages").inc(blocks)
+        self.registry.counter("kv.swap_in_bytes").inc(
+            blocks * self.page_nbytes(pools))
         return pools
 
     def set_host_budget(self, pages: int) -> int:

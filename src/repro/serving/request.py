@@ -3,6 +3,13 @@
 Latency decomposition follows Table 1: *waiting* is all time a request
 spends queued (before retrieval and between retrieval and generation);
 *retrieval* and *generation* are the in-batch processing times.
+
+Requests can legitimately carry partial timestamps: a request harvested
+by EOS on the continuous path may finish before ``t_gen_start`` is
+stamped, and anything still in flight at shutdown has trailing Nones.
+The component properties return NaN for missing segments instead of
+raising, and :func:`latency_table` averages only fully-timestamped
+requests, reporting the rest under an ``incomplete`` count.
 """
 from __future__ import annotations
 
@@ -34,21 +41,34 @@ class Request:
         return self.t_gen_end is not None
 
     @property
+    def complete(self) -> bool:
+        """All four pipeline timestamps stamped (latency decomposable)."""
+        return None not in (self.t_ret_start, self.t_ret_end,
+                            self.t_gen_start, self.t_gen_end)
+
+    @property
     def latency(self) -> float:
-        return self.t_gen_end - self.arrival
+        return _sub(self.t_gen_end, self.arrival)
 
     @property
     def waiting(self) -> float:
-        return ((self.t_ret_start - self.arrival)
-                + (self.t_gen_start - self.t_ret_end))
+        return (_sub(self.t_ret_start, self.arrival)
+                + _sub(self.t_gen_start, self.t_ret_end))
 
     @property
     def retrieval(self) -> float:
-        return self.t_ret_end - self.t_ret_start
+        return _sub(self.t_ret_end, self.t_ret_start)
 
     @property
     def generation(self) -> float:
-        return self.t_gen_end - self.t_gen_start
+        return _sub(self.t_gen_end, self.t_gen_start)
+
+
+def _sub(a: Optional[float], b: Optional[float]) -> float:
+    """None-safe difference: NaN when either endpoint is unstamped."""
+    if a is None or b is None:
+        return float("nan")
+    return a - b
 
 
 def percentile(xs: Sequence[float], p: float) -> float:
@@ -63,12 +83,14 @@ def percentile(xs: Sequence[float], p: float) -> float:
 
 
 def latency_table(reqs: Sequence[Request]) -> Dict[str, float]:
-    done = [r for r in reqs if r.done]
+    done = [r for r in reqs if r.done and r.complete]
+    incomplete = sum(1 for r in reqs if not (r.done and r.complete))
     if not done:
-        return {"n": 0}
+        return {"n": 0, "incomplete": incomplete}
     lat = [r.latency for r in done]
     return {
         "n": len(done),
+        "incomplete": incomplete,
         "avg_latency": sum(lat) / len(lat),
         "avg_waiting": sum(r.waiting for r in done) / len(done),
         "avg_retrieval": sum(r.retrieval for r in done) / len(done),

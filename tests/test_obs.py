@@ -1,0 +1,398 @@
+"""Observability layer: tracer, metrics registry, engine wiring, checker.
+
+Contracts pinned here:
+
+* disabled tracing/metrics are true no-ops (shared singletons, no state);
+* the engine produces **token-identical** outputs with tracing on vs off
+  (observability must never perturb scheduling or decoding);
+* histogram bucket boundaries are a pure function of their parameters
+  (cross-run / cross-shard bucket compatibility);
+* exported traces are valid Chrome/Perfetto JSON — every ``E`` closes a
+  matching ``B``, async ``b``/``e`` pair up across threads — and
+  ``scripts/check_trace.py`` accepts them (and rejects corrupted ones);
+* ``SearchStats`` merge conserves totals; partially-timestamped requests
+  never crash the latency report.
+"""
+import importlib.util
+import json
+import math
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.obs import (MetricsRegistry, NULL_REGISTRY, NULL_SPAN,
+                       NULL_TRACER, NullTracer, Tracer, log_buckets)
+from repro.retrieval.vectorstore import SearchStats
+from repro.serving.request import Request, latency_table
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_trace", REPO / "scripts" / "check_trace.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ------------------------------------------------------------------ tracer
+
+def test_null_tracer_is_noop(tmp_path):
+    tr = NULL_TRACER
+    assert tr.enabled is False
+    assert tr.span("x", a=1) is NULL_SPAN
+    assert tr.scope(1, 2) is NULL_SPAN
+    with tr.span("x"):
+        with tr.scope(7):
+            assert tr.current_scope() == ()
+    token = tr.begin("req")
+    assert token is None
+    tr.end(token)                       # None token: no-op, no raise
+    tr.instant("i")
+    tr.counter("c", 1.0)
+    assert tr.events() == []
+    out = tmp_path / "t.json"
+    tr.export(str(out))
+    assert not out.exists()             # disabled tracer writes nothing
+
+
+def test_span_nesting_round_trips(tmp_path):
+    tr = Tracer()
+    with tr.span("outer", k=1):
+        with tr.span("inner"):
+            tr.instant("tick")
+        tr.counter("depth", 2.0)
+    out = tmp_path / "trace.json"
+    n = tr.export(str(out))
+    assert n == 6                       # 2x(B+E) + i + C
+    doc = json.loads(out.read_text())
+    evs = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+    assert [e["ph"] for e in evs] == ["B", "B", "i", "E", "C", "E"]
+    assert all(e["cat"] == "repro" for e in evs)
+    ts = [e["ts"] for e in evs]
+    assert ts == sorted(ts)
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert meta and meta[0]["name"] == "thread_name"
+    # every E closes the matching B (checker enforces nesting)
+    chk = _load_checker()
+    assert chk.check(doc, require=[], any_groups=[]) == []
+
+
+def test_scope_tags_trace_ids():
+    tr = Tracer()
+    with tr.scope(3, 5):
+        assert tr.current_scope() == (3, 5)
+        with tr.span("tagged"):
+            pass
+        with tr.span("explicit", trace_ids=[9]):
+            pass
+    with tr.span("outside"):
+        pass
+    by_name = {name: attrs for ph, name, ts, tid, aid, attrs
+               in tr.events() if ph == "B"}
+    assert by_name["tagged"]["trace_ids"] == [3, 5]
+    assert by_name["explicit"]["trace_ids"] == [9]
+    assert by_name["outside"] is None
+
+
+def test_async_span_crosses_threads(tmp_path):
+    tr = Tracer()
+    token = tr.begin("request", trace_ids=[1])
+    t = threading.Thread(target=lambda: tr.end(token), name="closer")
+    t.start()
+    t.join()
+    tr.end(None)                        # null token tolerated
+    out = tmp_path / "t.json"
+    tr.export(str(out))
+    doc = json.loads(out.read_text())
+    evs = [e for e in doc["traceEvents"] if e["ph"] in "be"]
+    assert [e["ph"] for e in evs] == ["b", "e"]
+    assert evs[0]["id"] == evs[1]["id"]
+    assert evs[0]["tid"] != evs[1]["tid"]
+    chk = _load_checker()
+    assert chk.check(doc, require=["request"], any_groups=[]) == []
+
+
+def test_ring_buffer_bounds_memory():
+    tr = Tracer(capacity=8)
+    for i in range(20):
+        with tr.span(f"s{i}"):
+            pass
+    assert len(tr.events()) == 8
+    assert tr.dropped == 32             # 40 events through an 8-slot ring
+    with pytest.raises(ValueError):
+        Tracer(capacity=0)
+
+
+def test_span_balanced_on_exception(tmp_path):
+    tr = Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("body"):
+            raise RuntimeError("boom")
+    phases = [e[0] for e in tr.events()]
+    assert phases == ["B", "E"]         # exception still closes the span
+
+
+# ----------------------------------------------------------------- metrics
+
+def test_log_buckets_are_a_pure_function():
+    a = log_buckets(1e-6, 1e3, per_decade=2)
+    b = log_buckets(1e-6, 1e3, per_decade=2)
+    assert a == b                       # bucket-compatible across runs
+    assert a[0] == pytest.approx(1e-6)
+    assert a[-1] == pytest.approx(1e3)
+    assert len(a) == 19                 # 9 decades x 2 + fencepost
+    assert all(x < y for x, y in zip(a, a[1:]))
+    # half-decade ratio everywhere
+    for x, y in zip(a, a[1:]):
+        assert y / x == pytest.approx(math.sqrt(10.0), rel=1e-9)
+    with pytest.raises(ValueError):
+        log_buckets(1.0, 0.5)
+
+
+def test_histogram_boundary_stability():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", bounds=(1.0, 10.0, 100.0))
+    for v in (0.5, 1.0, 1.5, 10.0, 99.0, 1000.0):
+        h.observe(v)
+    # obs <= bounds[i] lands in bucket i; > bounds[-1] overflows
+    assert h.counts == [2, 2, 1, 1]
+    assert h.count == 6
+    assert h.mean == pytest.approx(sum((0.5, 1.0, 1.5, 10.0, 99.0,
+                                        1000.0)) / 6)
+    d = h.to_dict()
+    assert d["min"] == 0.5 and d["max"] == 1000.0
+    assert d["bounds"] == [1.0, 10.0, 100.0]
+    # same name returns the same instrument; new bounds are rejected
+    assert reg.histogram("lat") is h
+    with pytest.raises(ValueError):
+        reg.histogram("lat", bounds=(2.0, 20.0))
+
+
+def test_registry_instruments_and_journal(tmp_path):
+    reg = MetricsRegistry(max_events=3)
+    reg.counter("hits").inc()
+    reg.counter("hits").inc(2)
+    with pytest.raises(ValueError):
+        reg.counter("hits").inc(-1)
+    reg.gauge("occ").set(5)
+    reg.gauge("occ").add(-2)
+    with pytest.raises(ValueError):
+        reg.gauge("hits")               # cross-kind name collision
+    for i in range(5):
+        reg.event("policy", step=i)
+    evs = reg.events("policy")
+    assert [e["step"] for e in evs] == [2, 3, 4]   # bounded journal
+    assert [e["seq"] for e in evs] == [3, 4, 5]    # seq survives drops
+    assert reg.events("nope") == []
+    snap = reg.snapshot()
+    assert snap["counters"]["hits"] == 3.0
+    assert snap["gauges"]["occ"] == 3.0
+    out = tmp_path / "metrics.json"
+    reg.export(str(out))
+    assert json.loads(out.read_text())["counters"]["hits"] == 3.0
+
+
+def test_null_registry_is_noop(tmp_path):
+    reg = NULL_REGISTRY
+    assert reg.enabled is False
+    reg.counter("x").inc()
+    reg.gauge("y").set(1)
+    reg.histogram("z").observe(2)
+    reg.event("policy", a=1)
+    assert reg.events() == []
+    assert reg.snapshot() == {}
+    out = tmp_path / "m.json"
+    reg.export(str(out))
+    assert not out.exists()
+
+
+# -------------------------------------------------------------- SearchStats
+
+def test_searchstats_add_rejects_unknown():
+    s = SearchStats()
+    s.add(partitions_searched=2, load_seconds=0.5)
+    assert s.partitions_searched == 2
+    with pytest.raises(AttributeError):
+        s.add(not_a_counter=1)
+
+
+def test_searchstats_merge_conserves_totals():
+    a, b = SearchStats(), SearchStats()
+    a.add(partitions_searched=3, partitions_loaded=1, hot_hits=2,
+          load_seconds=0.25)
+    a.record_search(0, 2.0)
+    a.record_search(1)
+    b.add(partitions_searched=5, partitions_loaded=2, cache_hits=4,
+          search_seconds=0.5)
+    b.record_search(2)
+    a.merge(b)
+    assert a.partitions_searched == 8
+    assert a.partitions_loaded == 3
+    assert a.cache_hits == 4 and a.hot_hits == 2
+    assert a.load_seconds == pytest.approx(0.25)
+    assert a.search_seconds == pytest.approx(0.5)
+    assert a.hit_counts[0] == 2 and a.hit_counts[1] == 1 \
+        and a.hit_counts[2] == 1
+    snap = a.snapshot()
+    assert snap["partitions_searched"] == 8
+    assert 0.0 <= snap["hot_hit_rate"] <= 1.0
+    a.reset()
+    assert a.partitions_searched == 0 and a.load_seconds == 0.0
+    assert a.hit_counts[0] == 2        # heat is policy state, kept
+
+
+# ------------------------------------------------- partial-timestamp guards
+
+def test_partial_timestamps_never_crash_reporting():
+    full = Request(rid=0, query="q", arrival=0.0)
+    full.output = "x"
+    full.t_ret_start, full.t_ret_end = 1.0, 2.0
+    full.t_gen_start, full.t_gen_end = 3.0, 4.0
+    partial = Request(rid=1, query="q", arrival=0.0)
+    partial.output = "y"               # harvested before t_gen_start
+    partial.t_ret_start, partial.t_ret_end = 1.0, 2.0
+    assert full.complete and not partial.complete
+    assert math.isnan(partial.latency) and math.isnan(partial.waiting)
+    tab = latency_table([full, partial])
+    assert tab["n"] == 1 and tab["incomplete"] == 1
+    assert tab["avg_latency"] == pytest.approx(4.0)
+    empty = latency_table([partial])
+    assert empty == {"n": 0, "incomplete": 1}
+
+
+# ----------------------------------------------------------------- checker
+
+def test_checker_rejects_broken_traces():
+    chk = _load_checker()
+    pid = 1
+    def ev(ph, name, ts, tid=1, **kw):
+        return {"name": name, "ph": ph, "ts": ts, "pid": pid,
+                "tid": tid, **kw}
+    # unbalanced B
+    doc = {"traceEvents": [ev("B", "open", 1.0)]}
+    assert any("unclosed" in e for e in
+               chk.check(doc, require=[], any_groups=[]))
+    # E with no B / bad nesting
+    doc = {"traceEvents": [ev("E", "ghost", 1.0)]}
+    assert any("no open B" in e for e in
+               chk.check(doc, require=[], any_groups=[]))
+    doc = {"traceEvents": [ev("B", "a", 1.0), ev("B", "b", 2.0),
+                           ev("E", "a", 3.0), ev("E", "b", 4.0)]}
+    assert any("bad nesting" in e for e in
+               chk.check(doc, require=[], any_groups=[]))
+    # out-of-order timestamps
+    doc = {"traceEvents": [ev("B", "a", 5.0), ev("E", "a", 1.0)]}
+    assert any("not sorted" in e for e in
+               chk.check(doc, require=[], any_groups=[]))
+    # missing keys
+    doc = {"traceEvents": [{"ph": "B", "ts": 1.0}]}
+    assert any("missing keys" in e for e in
+               chk.check(doc, require=[], any_groups=[]))
+    # async e with no b
+    doc = {"traceEvents": [ev("e", "req", 1.0, id=7)]}
+    assert any("no open b" in e for e in
+               chk.check(doc, require=[], any_groups=[]))
+    # no request timeline
+    doc = {"traceEvents": [ev("B", "a", 1.0), ev("E", "a", 2.0)]}
+    assert any("trace_ids" in e for e in
+               chk.check(doc, require=["a"], any_groups=[]))
+    # and a good trace passes
+    doc = {"traceEvents": [
+        ev("B", "a", 1.0, args={"trace_ids": [0]}),
+        ev("E", "a", 2.0)]}
+    assert chk.check(doc, require=["a"], any_groups=[]) == []
+
+
+# ------------------------------------------------------------ engine wiring
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models.model import Model
+
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    params = Model(cfg, remat=False).init(jax.random.PRNGKey(0),
+                                          jnp.float32)
+    return cfg, params
+
+
+def _mini_engine_outputs(tiny_model, root, tracer, registry):
+    """Deterministic single-threaded engine drive (fig8's mini-trace
+    shape): retrieve a batch, then pump admit/decode to completion."""
+    import time
+
+    from repro.core.scheduler import BacklogScheduler
+    from repro.retrieval import HashEmbedder, VectorStore
+    from repro.serving.engine import RagdollEngine
+    from repro.serving.generator import (ContinuousGenerator,
+                                         GeneratorConfig)
+
+    cfg, params = tiny_model
+    emb = HashEmbedder(dim=16)
+    texts = [f"doc {i} topic{i % 3}" for i in range(40)]
+    store = VectorStore.build(texts, emb, num_partitions=4, root=root)
+    store.spill(3)
+    gen = ContinuousGenerator(
+        cfg, params, GeneratorConfig(ctx_len=16, max_new_tokens=4),
+        num_slots=2, streamed=False, paged=True, page_size=4)
+    eng = RagdollEngine(store, emb, gen, BacklogScheduler(max_batch=8),
+                        BacklogScheduler(max_batch=2),
+                        initial_partitions=2, tracer=tracer,
+                        registry=registry)
+    reqs = [Request(rid=i, query=f"query {i}", arrival=time.perf_counter())
+            for i in range(4)]
+    try:
+        for r in reqs:
+            eng.submit(r)               # opens the async request span
+        batch = eng.pipeline.retrieval_queue.pop_batch(len(reqs))
+        assert len(batch) == len(reqs)
+        eng._retrieve_batch(batch)
+        eng.pipeline.context_queue.put_many(batch)
+        guard = 0
+        while eng.pump_once() < len(reqs):
+            guard += 1
+            assert guard < 400, "mini engine stalled"
+    finally:
+        eng.streamer.close()
+    return {r.rid: r.output for r in eng.completed}, eng
+
+
+def test_engine_tracing_is_token_identical(tiny_model, tmp_path):
+    """Tracing on vs off must not change a single output token, the
+    trace must pass the schema checker with per-request stage coverage,
+    and the metrics snapshot must cover pages/search/prefix counters."""
+    chk = _load_checker()
+    out_off, _ = _mini_engine_outputs(
+        tiny_model, str(tmp_path / "off"), tracer=None, registry=None)
+    tr = Tracer()
+    reg = MetricsRegistry()
+    out_on, eng = _mini_engine_outputs(
+        tiny_model, str(tmp_path / "on"), tracer=tr, registry=reg)
+    assert out_on == out_off            # observability never perturbs
+    assert len(out_on) == 4 and all(out_on.values())
+
+    path = tmp_path / "trace.json"
+    n = tr.export(str(path))
+    assert n > 0 and tr.dropped == 0
+    doc = json.loads(path.read_text())
+    assert chk.check(doc) == []         # default per-request coverage
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] != "M"}
+    for required in ("request", "retrieve.batch", "embed", "search",
+                     "prefill", "decode.step"):
+        assert required in names, required
+
+    snap = eng.metrics_snapshot()
+    assert snap["counters"]["engine.retrieve_batches"] >= 1.0
+    assert snap["counters"]["engine.completed"] == 4.0
+    assert "kv.pages_capacity" in snap["gauges"]
+    assert "search.partitions_searched" in snap["gauges"]
+    assert snap["gauges"]["search.partitions_searched"] >= 1.0
+    assert snap["histograms"]["request.latency_seconds"]["count"] == 4
+    # engine-owned registry keeps the policy journal seam alive
+    assert eng.policy_trace == []       # pump_once skips the boundary
