@@ -37,8 +37,12 @@ RATES = (4, 8, 12, 16)
 
 
 def cost_model(model: str = "llama3-70b",
-               hw: HardwareProfile = PF_HIGH, **kw) -> CostModel:
-    mp = ModelProfile.from_config(get_config(model))
+               hw: HardwareProfile = PF_HIGH,
+               kv_format: str = "fp32", **kw) -> CostModel:
+    # price KV at the format the engines actually allocate: the serving
+    # pools default to fp32 (GeneratorConfig.dtype), so the old 2-byte
+    # profile default under-priced every page by 2x and over-admitted
+    mp = ModelProfile.from_config(get_config(model), kv_format=kv_format)
     return CostModel(hw, mp, partition_bytes=PARTITION_BYTES,
                      num_partitions=NUM_PARTITIONS, **kw)
 

@@ -38,7 +38,7 @@ def _drive_deterministic(eng, reqs):
 
 def engine_rows(n_requests: int = 10, num_slots: int = 3,
                 variants=("dense", "paged", "paged_tight", "paged_swap",
-                          "prefix_off", "prefix_on"),
+                          "paged_int8", "prefix_off", "prefix_on"),
                 tracer=None, registry=None):
     """Continuous-trace percentiles from the real mini-engine.
 
@@ -51,6 +51,17 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
     host pool, so preemption admits a strictly larger concurrent batch
     at the same device budget (``peak=`` in the row text; CI asserts
     the inequality).
+
+    ``paged_int8`` spends the SAME starved device-byte budget as
+    ``paged_tight`` (2 worst-case requests' worth of fp32 page bytes)
+    on an int8-quantized pool: each page costs ~4x fewer bytes (int8
+    payload + fp32 per-page-per-head scales), so the identical byte
+    grant clears ~4x the pages — the bits-per-token dimension of the
+    device-byte market, realized.  The row text reports ``budget=``
+    (pages the byte grant admitted — CI asserts >= 1.8x the fp32 row)
+    and ``swap_bytes=`` (actual swap DMA leaf bytes — CI asserts
+    strictly lower than ``paged_swap``, whose fp32 pool must preempt
+    to admit the same workload the int8 pool fits outright).
 
     ``prefix_off`` / ``prefix_on`` run a shared-prefix workload (every
     request asks the same query, so retrieval builds identical prompts
@@ -99,6 +110,16 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
                           host_page_budget=(num_slots * worst
                                             if variant == "paged_swap"
                                             else 0))
+            elif variant == "paged_int8":
+                # the same device-byte grant as paged_tight, spent on
+                # int8 pages (payload + fp32 scale rows) — the byte
+                # market's bits-per-token dimension
+                fp32_page = page * cfg.kv_cache_bytes_per_token(4)
+                int8_page = (page * cfg.kv_cache_bytes_per_token(1)
+                             + cfg.kv_scale_bytes_per_page())
+                kw = dict(paged=True, kv_format="int8",
+                          page_budget=(2 * worst * fp32_page) // int8_page,
+                          host_page_budget=num_slots * worst)
             elif prefix:
                 kw = dict(paged=True,
                           prefix_cache=(variant == "prefix_on"))
@@ -117,8 +138,8 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
                                 tracer=tracer,
                                 registry=(registry
                                           if registry.enabled else None))
-            deterministic = variant in ("paged_tight", "paged_swap") \
-                or prefix
+            deterministic = variant in ("paged_tight", "paged_swap",
+                                        "paged_int8") or prefix
             # shared-prefix workload: every request asks the same query,
             # so retrieval assembles identical prompts
             queries = ["recurring shared question" if prefix
@@ -150,6 +171,12 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
             if deterministic:
                 info += (f" peak={gen.peak_in_flight}"
                          f" swaps={gen.swap_outs}")
+                if gen.paged and not prefix:
+                    # budget = pages the byte grant cleared; swap_bytes
+                    # = actual leaf bytes DMAed (format-dependent)
+                    info += (f" budget={gen.kv.pool.capacity}"
+                             f" swap_bytes={gen.kv.swap_out_bytes + gen.kv.swap_in_bytes}"
+                             f" kv_format={gen.kv_format}")
             if prefix:
                 info += (f" ttft_tok={gen.prefill_tokens / max(gen.joins, 1):.1f}"
                          f" hit_tok={gen.prefix_hit_tokens}"

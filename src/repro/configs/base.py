@@ -262,6 +262,20 @@ class ModelConfig:
                 self.resolved_head_dim * dtype_bytes  # cross-attn cache
         return total
 
+    def kv_scale_bytes_per_page(self, scale_bytes: int = 4) -> int:
+        """Per-KV-page quantization-scale bytes across all layers.
+
+        int8 KV pools keep one fp32 scale per (page, kv_head) for each of
+        k and v (``kernels/quant.py``); this is the per-page overhead the
+        byte market must price on top of the int8 payload.  Only
+        attention-family mixers page (and hence quantize) their KV.
+        """
+        total = 0
+        for mixer, _ in self.layer_kinds():
+            if mixer in ("attn", "local"):
+                total += 2 * self.num_kv_heads * scale_bytes
+        return total
+
     def ssm_state_bytes(self, dtype_bytes: int = 4) -> int:
         """Per-sequence constant state (mamba conv + ssd state)."""
         if self.ssm is None:

@@ -62,9 +62,23 @@ TPU_V5E_HOST = HardwareProfile(
     cpu_flops=1.0e12)
 
 
+# bytes per stored KV element for each pool format (mirrors
+# serving.kvpool.KV_FORMAT_BYTES; kept literal here so the cost model
+# has no dependency on the serving layer)
+KV_FORMAT_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+
+
 @dataclass(frozen=True)
 class ModelProfile:
-    """Byte/FLOP footprint of one model, derived from its config."""
+    """Byte/FLOP footprint of one model, derived from its config.
+
+    ``kv_format`` is the live pool format bytes-per-token is derived
+    from — the 2x accounting bug this layer used to have was pricing KV
+    with a hard-coded 2-byte dtype while the engines allocated fp32
+    pools.  ``kv_scale_bytes_per_page`` is the per-page fp32
+    dequantization-scale overhead; :meth:`kv_page_bytes` adds it only
+    when the format is int8.
+    """
     name: str
     n_params: int
     n_active: int
@@ -74,21 +88,55 @@ class ModelProfile:
     ssm_state_bytes: int        # per sequence (constant in ctx len)
     d_model: int
     vocab_size: int
+    kv_format: str = "bf16"
+    kv_scale_bytes_per_page: int = 0
 
     @classmethod
-    def from_config(cls, cfg: ModelConfig, dtype_bytes: int = 2
-                    ) -> "ModelProfile":
+    def from_config(cls, cfg: ModelConfig, dtype_bytes: int = 2,
+                    kv_format: Optional[str] = None) -> "ModelProfile":
+        """Derive the profile; ``kv_format`` names the actual KV pool
+        format (fp32/bf16/int8) and overrides ``dtype_bytes`` for the
+        KV terms.  ``kv_format=None`` keeps the legacy ``dtype_bytes``
+        pricing for callers that manage their own accounting."""
+        if kv_format is not None:
+            if kv_format not in KV_FORMAT_BYTES:
+                raise ValueError(f"unknown kv_format {kv_format!r}")
+            kv_dtype_bytes = KV_FORMAT_BYTES[kv_format]
+        else:
+            kv_dtype_bytes = dtype_bytes
+            kv_format = {4: "fp32", 2: "bf16", 1: "int8"}.get(
+                dtype_bytes, "bf16")
         return cls(
             name=cfg.name,
             n_params=cfg.param_count(),
             n_active=cfg.param_count(active_only=True),
             n_layers=cfg.num_layers,
             weight_bytes=cfg.weight_bytes(dtype_bytes),
-            kv_bytes_per_token=cfg.kv_cache_bytes_per_token(dtype_bytes),
+            kv_bytes_per_token=cfg.kv_cache_bytes_per_token(kv_dtype_bytes),
             ssm_state_bytes=cfg.ssm_state_bytes(),
             d_model=cfg.d_model,
             vocab_size=cfg.vocab_size,
+            kv_format=kv_format,
+            kv_scale_bytes_per_page=cfg.kv_scale_bytes_per_page(),
         )
+
+    def with_kv_format(self, kv_format: str) -> "ModelProfile":
+        """Reprice the KV terms for a different pool format (same model).
+
+        The per-token byte count rescales exactly (it is linear in the
+        element size); the scale overhead only bites for int8 via
+        :meth:`kv_page_bytes`.  This is how the placement market prices
+        the bits-per-token dimension without re-deriving from config.
+        """
+        if kv_format not in KV_FORMAT_BYTES:
+            raise ValueError(f"unknown kv_format {kv_format!r}")
+        if kv_format == self.kv_format:
+            return self
+        old = KV_FORMAT_BYTES[self.kv_format]
+        new = KV_FORMAT_BYTES[kv_format]
+        return replace(self, kv_format=kv_format,
+                       kv_bytes_per_token=self.kv_bytes_per_token
+                       * new // old)
 
     @property
     def layer_bytes(self) -> float:
@@ -104,8 +152,12 @@ class ModelProfile:
         return 4 * batch * seq_len * self.d_model * 2
 
     def kv_page_bytes(self, page_size: int) -> float:
-        """Bytes of one KV page across all layers (placement's paging unit)."""
-        return page_size * self.kv_bytes_per_token
+        """Bytes of one KV page across all layers (placement's paging
+        unit).  int8 pages carry their fp32 dequantization scales, so
+        the market prices the real leaf bytes, not just the payload."""
+        scale = (self.kv_scale_bytes_per_page
+                 if self.kv_format == "int8" else 0)
+        return page_size * self.kv_bytes_per_token + scale
 
     def flops_per_token(self) -> float:
         return 2 * self.n_active          # forward pass, per token
@@ -302,8 +354,15 @@ class CostModel:
         return moved_bytes / self.hw.pcie_bw
 
     # ---------------------------------------------------------------- swap
-    def kv_swap_time(self, pages: int, page_size: int) -> float:
+    def kv_swap_time(self, pages: int, page_size: int,
+                     kv_format: Optional[str] = None) -> float:
         """One whole-page KV swap, either direction: ``pages`` pages of
         ``page_size`` tokens across all layers over the measured PCIe
-        bandwidth (the simulator's preemption latency model)."""
-        return pages * self.mp.kv_page_bytes(page_size) / self.hw.pcie_bw
+        bandwidth (the simulator's preemption latency model).  Priced
+        from the profile's own pool format — the same source the page
+        budget uses — so DMA and capacity can never disagree about the
+        bytes of a page; ``kv_format`` reprices for a different live
+        format (int8 swaps move ~4x fewer bytes)."""
+        mp = (self.mp if kv_format is None
+              else self.mp.with_kv_format(kv_format))
+        return pages * mp.kv_page_bytes(page_size) / self.hw.pcie_bw

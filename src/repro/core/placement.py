@@ -71,6 +71,11 @@ class MarketSplit:
     ``host_page_budget`` is the ``c_cpu`` swap headroom — a host-tier
     budget reported alongside so the policy boundary makes one market
     call instead of three per-subsystem ones.
+
+    ``kv_format``/``bits_per_token`` record the pool format the pages
+    were priced at: the byte pool is fixed by the placement, so a
+    lower-bit format clears MORE pages out of the same grant (int8
+    roughly 4x the fp32 page count, minus the per-page scale overhead).
     """
     total_bytes: float
     page_bytes: float
@@ -80,6 +85,8 @@ class MarketSplit:
     hot_bytes: int
     hot_partitions: int
     hot_hit_rate: float    # expected probe fraction the hot tier answers
+    kv_format: str = "bf16"
+    bits_per_token: float = 0.0   # stored KV bits per token, all layers
 
     def device_bytes(self) -> float:
         return self.kv_page_budget * self.page_bytes + self.hot_bytes
@@ -146,12 +153,17 @@ class PlacementOptimizer:
                 * self.cost.mp.kv_bytes_per_token)
 
     def kv_page_budget(self, p: Placement,
-                       page_size: Optional[int] = None) -> int:
+                       page_size: Optional[int] = None,
+                       kv_format: Optional[str] = None) -> int:
         """The placement's KV allocation expressed in whole pages — the
         budget the engine hands to ``PagePool.resize`` at every policy
-        boundary (page-budget <-> placement coupling)."""
-        page_bytes = self.cost.mp.kv_page_bytes(page_size
-                                                or self.kv_page_size)
+        boundary (page-budget <-> placement coupling).  ``kv_format``
+        reprices the page out of the same byte grant (the market's
+        bits-per-token dimension): int8 pages are ~4x cheaper, so the
+        same grant clears ~4x the pages."""
+        mp = (self.cost.mp if kv_format is None
+              else self.cost.mp.with_kv_format(kv_format))
+        page_bytes = mp.kv_page_bytes(page_size or self.kv_page_size)
         return int(self.kv_gpu_bytes(p) // max(page_bytes, 1.0))
 
     def kv_host_bytes(self, p: Placement) -> float:
@@ -162,14 +174,17 @@ class PlacementOptimizer:
                 * self.cost.mp.kv_bytes_per_token)
 
     def kv_host_page_budget(self, p: Placement,
-                            page_size: Optional[int] = None) -> int:
+                            page_size: Optional[int] = None,
+                            kv_format: Optional[str] = None) -> int:
         """The ``c_cpu`` KV share expressed in whole pages — the budget
         the engine hands to ``HostPagePool.resize`` at every policy
         boundary, exactly like :meth:`kv_page_budget` does for the
-        device pool.  Zero when the placement keeps no KV on the host
-        (swap-to-host is then legitimately unavailable)."""
-        page_bytes = self.cost.mp.kv_page_bytes(page_size
-                                                or self.kv_page_size)
+        device pool (including its ``kv_format`` repricing).  Zero when
+        the placement keeps no KV on the host (swap-to-host is then
+        legitimately unavailable)."""
+        mp = (self.cost.mp if kv_format is None
+              else self.cost.mp.with_kv_format(kv_format))
+        page_bytes = mp.kv_page_bytes(page_size or self.kv_page_size)
         return int(self.kv_host_bytes(p) // max(page_bytes, 1.0))
 
     def prefix_cache_page_budget(self, p: Placement,
@@ -194,8 +209,8 @@ class PlacementOptimizer:
         return self.kv_gpu_bytes(p)
 
     def market(self, p: Placement, page_size: Optional[int] = None,
-               partition_heat: Optional[Sequence[float]] = None
-               ) -> MarketSplit:
+               partition_heat: Optional[Sequence[float]] = None,
+               kv_format: Optional[str] = None) -> MarketSplit:
         """Clear the device-byte market: arbitrate the pool between live
         KV pages, the prefix-cache cap, and device-hot partitions.
 
@@ -210,9 +225,22 @@ class PlacementOptimizer:
         wins.  Ties keep the smaller hot fraction, so with no heat (or
         paper-scale partitions that dwarf the pool) the split reproduces
         the legacy per-subsystem budgets exactly.
+
+        ``kv_format`` adds the bits-per-token dimension: the byte pool
+        the placement grants is FIXED, but a quantized pool format
+        shrinks the real bytes of one page (int8 payload + fp32 scales,
+        via :meth:`ModelProfile.with_kv_format`), so the same grant
+        clears proportionally more pages — and a larger effective batch
+        — without moving Eq. 2.  ``None`` prices at the profile's own
+        format.  The quality floor stays in the kernels: prefill and
+        all attention accumulation remain fp32 regardless of the
+        storage format, so the market never trades accuracy it cannot
+        see.
         """
         ps = page_size or self.kv_page_size
-        page_bytes = max(self.cost.mp.kv_page_bytes(ps), 1.0)
+        mp = (self.cost.mp if kv_format is None
+              else self.cost.mp.with_kv_format(kv_format))
+        page_bytes = max(mp.kv_page_bytes(ps), 1.0)
         total = self.device_byte_budget(p)
         part_dev = max(self.cost.hot_partition_dev_bytes, 1.0)
         heat = sorted((h for h in (partition_heat or ()) if h > 0),
@@ -251,8 +279,12 @@ class PlacementOptimizer:
             total_bytes=total, page_bytes=page_bytes,
             kv_page_budget=pages,
             prefix_page_budget=int(self.prefix_cache_frac * pages),
-            host_page_budget=self.kv_host_page_budget(p, ps),
-            hot_bytes=hot_bytes, hot_partitions=n_hot, hot_hit_rate=hit)
+            # host swap headroom is a byte grant too: express it in
+            # pages of the SAME live format the device pool uses
+            host_page_budget=int(self.kv_host_bytes(p) // page_bytes),
+            hot_bytes=hot_bytes, hot_partitions=n_hot, hot_hit_rate=hit,
+            kv_format=mp.kv_format,
+            bits_per_token=8.0 * mp.kv_bytes_per_token)
         self.registry.event("market", **dataclasses.asdict(split))
         return split
 

@@ -327,6 +327,8 @@ def paged_decode_attention(
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
+    k_scale: Optional[jnp.ndarray] = None,   # (P, KV) int8 dequant scales
+    v_scale: Optional[jnp.ndarray] = None,
     impl: Optional[str] = None,
 ) -> jnp.ndarray:
     """Decode attention over a paged KV cache.
@@ -336,21 +338,31 @@ def paged_decode_attention(
     length), and runs the *exact* dense einsum path — so paged decode is
     bit-identical to the dense cache layout.  ``pallas`` streams pages
     inside the kernel via scalar-prefetch block tables (no dense copy).
+
+    For int8 pools, ``k_scale``/``v_scale`` carry the per-page-per-head
+    fp32 dequant scales; every backend applies the identical
+    ``int8 * scale`` product (the pallas grid dequantizes in-kernel, the
+    gather/naive tiers dequantize at gather time), so the cross-backend
+    identity contract survives quantization.
     """
     if impl is None:
         impl = "pallas" if _on_tpu() else "gather"
     if impl == "naive":
         return ref.paged_decode_attention_reference(
             q, k_pool, v_pool, block_tab, kv_len, kv_span=kv_span,
-            window=window, softcap=softcap, scale=scale)
+            window=window, softcap=softcap, scale=scale,
+            k_scale=k_scale, v_scale=v_scale)
     if impl == "pallas":
         from repro.kernels import paged_attention as pa
         return pa.paged_decode_attention_pallas(
             q, k_pool, v_pool, block_tab, kv_len, window=window,
-            softcap=softcap, scale=scale, interpret=not _on_tpu())
+            softcap=softcap, scale=scale, k_scale=k_scale,
+            v_scale=v_scale, interpret=not _on_tpu())
     if impl == "gather":
-        k_dense = ref.gather_paged_kv(k_pool, block_tab, kv_span)
-        v_dense = ref.gather_paged_kv(v_pool, block_tab, kv_span)
+        k_dense = ref.gather_paged_kv(k_pool, block_tab, kv_span,
+                                      scale=k_scale)
+        v_dense = ref.gather_paged_kv(v_pool, block_tab, kv_span,
+                                      scale=v_scale)
         return _decode_einsum(q, k_dense, v_dense, kv_len,
                               window=window, softcap=softcap, scale=scale)
     raise ValueError(f"unknown paged decode impl {impl!r}")

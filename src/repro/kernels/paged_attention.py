@@ -11,8 +11,23 @@ exactly the pages a sequence owns — no host-side gather, no dense copy.
 
 Grid: (batch, kv_head, blocks); blocks innermost ("arbitrary") with VMEM
 scratch carrying the online softmax, mirroring ``decode_attention.py``.
-Blocks past ``kv_len`` (including trash-page entries of short block
-tables) are skipped by ``pl.when``, so unallocated blocks cost nothing.
+Blocks past ``kv_len`` are skipped by ``pl.when``, and their
+``index_map`` entries are *clamped to the slot's last real block*: the
+Pallas pipeline elides the DMA when consecutive grid steps resolve to
+the same block index, so padded/trash entries of short block tables
+re-reference the already-resident page instead of streaming the trash
+page once per padded block.  (Measured in
+``tests/test_quant_kv.py::test_index_map_clamps_padded_blocks``: a slot
+using 2 of 8 table entries issues 2 distinct page fetches per head, not
+8 — without the clamp every padded entry DMAs the trash page before
+``pl.when`` gates its compute.)
+
+Quantized pools (``k_scale``/``v_scale`` given): KV pages are int8 and a
+``(P, KV)`` fp32 per-page-per-head scale array rides the scalar-prefetch
+machinery next to the block table; the kernel dequantizes each gathered
+page inside the grid (``int8 page * scale[tab[b, ik], kh]``) before the
+fp32 online-softmax accumulation, so quantization never touches the
+accumulation precision.
 """
 from __future__ import annotations
 
@@ -27,11 +42,17 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(tab_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
-            m_scr, l_scr, acc_scr, *,
+def _kernel(tab_ref, kvlen_ref, *refs,
             scale: float, window: Optional[int], softcap: Optional[float],
-            page: int, nk: int):
+            page: int, nk: int, quant: bool):
+    if quant:
+        (ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref,
+         m_scr, l_scr, acc_scr) = refs
+    else:
+        ks_ref = vs_ref = None
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
     b = pl.program_id(0)
+    kh = pl.program_id(1)
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -51,6 +72,12 @@ def _kernel(tab_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
         k = k_ref[0, 0].astype(jnp.float32)                  # (page, D)
         v = v_ref[0, 0].astype(jnp.float32)
+        if quant:
+            # per-page-per-head dequant: the scales sit in SMEM via
+            # scalar prefetch, indexed by the same block-table entry
+            # that routed this page's DMA
+            k = k * ks_ref[tab_ref[b, ik], kh]
+            v = v * vs_ref[tab_ref[b, ik], kh]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         if softcap is not None:
@@ -76,6 +103,24 @@ def _kernel(tab_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _kv_index_map(page: int):
+    """Block-table page lookup with padded entries clamped to the slot's
+    last real block.
+
+    For grid step ``(b, kh, ik)`` with ``ik`` beyond the slot's live
+    blocks, returning ``tab[b, ik]`` (the trash page) would DMA a page
+    whose compute ``pl.when`` then discards — the docstring's old "cost
+    nothing" claim was wrong about the memory system.  Clamping ``ik``
+    to the last block covered by ``kv_len`` makes every padded step
+    resolve to the same (already resident) page, which the Pallas
+    pipeline recognizes and skips re-fetching.
+    """
+    def index_map(b, kh, ik, tab, kl, *_):
+        last = jnp.maximum((kl[b] + page - 1) // page - 1, 0)
+        return (tab[b, jnp.minimum(ik, last)], kh, 0, 0)
+    return index_map
+
+
 def paged_decode_attention_pallas(
     q: jnp.ndarray,          # (B, H, D)
     k_pool: jnp.ndarray,     # (P, page, KV, D)
@@ -86,6 +131,8 @@ def paged_decode_attention_pallas(
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
+    k_scale: Optional[jnp.ndarray] = None,   # (P, KV) fp32, int8 pools
+    v_scale: Optional[jnp.ndarray] = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     b, h, d = q.shape
@@ -93,6 +140,8 @@ def paged_decode_attention_pallas(
     nmax = block_tab.shape[1]
     g = h // kvh
     scale = scale if scale is not None else d ** -0.5
+    quant = k_scale is not None
+    assert (v_scale is not None) == quant, "k_scale/v_scale come as a pair"
 
     qg = q.reshape(b, kvh, g, d)                 # (B, KV, G, D)
     kt = k_pool.transpose(0, 2, 1, 3)            # (P, KV, page, D)
@@ -102,21 +151,26 @@ def paged_decode_attention_pallas(
 
     kernel = functools.partial(
         _kernel, scale=scale, window=window, softcap=softcap,
-        page=page, nk=nmax)
+        page=page, nk=nmax, quant=quant)
+
+    kv_map = _kv_index_map(page)
+    n_prefetch = 4 if quant else 2
+    operands = [block_tab, kv_len]
+    if quant:
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,                    # block_tab, kv_len
+        num_scalar_prefetch=n_prefetch,  # tab, kv_len[, k_scale, v_scale]
         grid=(b, kvh, nmax),
         in_specs=[
             pl.BlockSpec((1, 1, g, d),
-                         lambda b, kh, ik, tab, kl: (b, kh, 0, 0)),
-            pl.BlockSpec((1, 1, page, d),
-                         lambda b, kh, ik, tab, kl: (tab[b, ik], kh, 0, 0)),
-            pl.BlockSpec((1, 1, page, d),
-                         lambda b, kh, ik, tab, kl: (tab[b, ik], kh, 0, 0)),
+                         lambda b, kh, ik, tab, kl, *_: (b, kh, 0, 0)),
+            pl.BlockSpec((1, 1, page, d), kv_map),
+            pl.BlockSpec((1, 1, page, d), kv_map),
         ],
         out_specs=pl.BlockSpec((1, 1, g, d),
-                               lambda b, kh, ik, tab, kl: (b, kh, 0, 0)),
+                               lambda b, kh, ik, tab, kl, *_: (b, kh, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g,), jnp.float32),
@@ -129,5 +183,5 @@ def paged_decode_attention_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
         interpret=interpret,
-    )(block_tab, kv_len, qg, kt, vt)
+    )(*operands, qg, kt, vt)
     return out.reshape(b, h, d)

@@ -1,0 +1,98 @@
+"""Int8 KV-page quantization: quantize-on-append with per-page scales.
+
+Pages store symmetric int8 (``q = round(x / scale)``, ``scale = amax/127``)
+with one fp32 scale per (page, kv_head) — coarse enough to ride the
+scalar-prefetch machinery into the paged-attention kernel, fine enough
+that per-head magnitude differences don't bleed across heads.
+
+The write path keeps two invariants:
+
+* **Monotone growth** — appending tokens to a live page may only *grow*
+  its scale (scatter-max); when it does, the page's existing int8 rows
+  are requantized by ``old/new`` so their dequantized values are
+  preserved (pages whose scale is unchanged see an exact ``* 1.0``
+  round-trip).
+* **Fresh-page reset** — a write landing at page offset 0 is, by
+  construction of the allocators, the first write of a page *lease*
+  (decode allocates pages exactly at block boundaries; full prefill
+  writes every page from offset 0): the page's stale scale from a
+  previous tenant is zeroed before the max, so recycled pages never
+  inherit a dead request's dynamic range.  Mid-page writes (chunked
+  prefill continuations, post-prefix-hit suffixes) are *not* fresh and
+  correctly max-grow the live scale.
+
+Swap and copy-on-write need no special casing: scales are ordinary
+``(…, P, KV)`` pool leaves, so host mirrors, page copies and resizes
+move them with the int8 payload (``tests/test_quant_kv.py`` pins the
+preempt/resume and CoW round trips property-style).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def paged_scatter_quant(pool: jnp.ndarray, scale: jnp.ndarray,
+                        new: jnp.ndarray, block_tab: jnp.ndarray,
+                        positions: jnp.ndarray):
+    """Quantize ``new`` into an int8 page pool at ``positions``.
+
+    pool: (P, page, KV, D) int8; scale: (P, KV) fp32;
+    new: (B, S, KV, D); block_tab: (B, nmax); positions: (B, S).
+    Returns ``(pool', scale')``.
+    """
+    page = pool.shape[1]
+    offs = positions % page
+    pages = jnp.take_along_axis(block_tab, positions // page, axis=1)
+    newf = new.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(newf), axis=-1)              # (B, S, KV)
+
+    flat_pages = pages.reshape(-1)
+    fresh = (offs.reshape(-1) == 0)
+    # fresh pages drop their previous tenant's scale; non-fresh entries
+    # redirect the zeroing to the trash page (row 0, never dequantized
+    # into live positions)
+    scale_base = scale.at[jnp.where(fresh, flat_pages, 0)].set(0.0)
+    new_scale = scale_base.at[flat_pages].max(
+        amax.reshape(-1, amax.shape[-1]) / 127.0)
+    # requantize rows whose scale grew; untouched pages get exactly 1.0
+    factor = jnp.where(scale_base > 0.0,
+                       scale_base / jnp.maximum(new_scale, EPS), 1.0)
+    pool_rq = jnp.round(pool.astype(jnp.float32) * factor[:, None, :, None])
+    sel = jnp.maximum(new_scale[pages], EPS)            # (B, S, KV)
+    q = jnp.clip(jnp.round(newf / sel[..., None]), -127, 127)
+    pool_out = pool_rq.at[pages, offs].set(q).astype(jnp.int8)
+    return pool_out, new_scale
+
+
+def quantize_rows(pool: jnp.ndarray, scale: jnp.ndarray, row: jnp.ndarray,
+                  pages: jnp.ndarray, offs: jnp.ndarray):
+    """Quantize a dense batch=1 prefill row into int8 pool pages.
+
+    Used by the full-prefill scatter: every touched page is written from
+    offset 0 (fresh), so touched pages' scales are reset-then-set and no
+    requantization of untouched pages is needed.
+
+    pool: (P, page, KV, D) or stacked (reps, P, page, KV, D) int8;
+    scale: (P, KV) or (reps, P, KV) fp32;
+    row: (…, 1, L, KV, D) dense row cache (length == len(pages));
+    pages/offs: (L,) flat page ids / in-page offsets.
+    Returns ``(pool', scale')``.
+    """
+    stacked = pool.ndim == 5
+    r = (row[:, 0] if stacked else row[0]).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(r), axis=-1)                 # (…, L, KV)
+    if stacked:
+        s0 = scale.at[:, pages].set(0.0)
+        new_scale = s0.at[:, pages].max(amax / 127.0)
+        sel = jnp.maximum(new_scale[:, pages], EPS)     # (reps, L, KV)
+        q = jnp.clip(jnp.round(r / sel[..., None]), -127, 127)
+        pool_out = pool.at[:, pages, offs].set(q.astype(jnp.int8))
+    else:
+        s0 = scale.at[pages].set(0.0)
+        new_scale = s0.at[pages].max(amax / 127.0)
+        sel = jnp.maximum(new_scale[pages], EPS)        # (L, KV)
+        q = jnp.clip(jnp.round(r / sel[..., None]), -127, 127)
+        pool_out = pool.at[pages, offs].set(q.astype(jnp.int8))
+    return pool_out, new_scale

@@ -110,15 +110,26 @@ def decode_attention_reference(
 
 
 def gather_paged_kv(pool: jnp.ndarray, block_tab: jnp.ndarray,
-                    kv_span: Optional[int] = None) -> jnp.ndarray:
+                    kv_span: Optional[int] = None,
+                    scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """(P, page, ...) pool + (B, nmax) block table -> dense (B, S, ...).
 
     ``kv_span`` statically truncates the gathered view to the dense
     cache length so downstream attention sees exactly the dense shape
     (token-identity with the unpaged path depends on this).
+
+    ``scale`` dequantizes an int8 pool on the fly: a per-page-per-head
+    ``(P, KV)`` fp32 scale array gathered through the same block table,
+    returning an fp32 dense view (``int8 * scale``).  Every backend
+    (pallas grid, gather, this oracle) applies the identical product, so
+    the bit-identity contract between backends survives quantization.
     """
     b, nmax = block_tab.shape
     gathered = pool[block_tab]                    # (B, nmax, page, ...)
+    if scale is not None:
+        # (B, nmax, KV) -> broadcast over the page and head-dim axes
+        s = scale[block_tab]
+        gathered = gathered.astype(jnp.float32) * s[:, :, None, :, None]
     dense = gathered.reshape((b, nmax * pool.shape[1]) + pool.shape[2:])
     if kv_span is not None:
         dense = dense[:, :kv_span]
@@ -136,10 +147,12 @@ def paged_decode_attention_reference(
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
+    k_scale: Optional[jnp.ndarray] = None,   # (P, KV) int8 dequant scales
+    v_scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Oracle: gather pages to the dense layout, run dense decode attention."""
-    k_dense = gather_paged_kv(k_pool, block_tab, kv_span)
-    v_dense = gather_paged_kv(v_pool, block_tab, kv_span)
+    k_dense = gather_paged_kv(k_pool, block_tab, kv_span, scale=k_scale)
+    v_dense = gather_paged_kv(v_pool, block_tab, kv_span, scale=v_scale)
     return decode_attention_reference(q, k_dense, v_dense, kv_len,
                                       window=window, softcap=softcap,
                                       scale=scale)

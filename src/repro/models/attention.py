@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.kernels import ops, ref
+from repro.kernels import ops, quant, ref
 from repro.models import layers
 from repro.sharding.specs import constrain
 
@@ -119,6 +119,22 @@ def attention_forward(
             vc = _row_update(cache["v"], v.astype(cache["v"].dtype), pos)
             kd = kc if kv_span is None else kc[:, :kv_span]
             vd = vc if kv_span is None else vc[:, :kv_span]
+        elif "k_scale" in cache:
+            # int8 pool: quantize the chunk on append, then dequantize
+            # the gathered view so the prefill attention itself runs in
+            # fp32 accumulation (the quantization quality floor)
+            kc, ks = quant.paged_scatter_quant(
+                cache["k"], cache["k_scale"], k, block_tab, positions)
+            vc, vs = quant.paged_scatter_quant(
+                cache["v"], cache["v_scale"], v, block_tab, positions)
+            kd = ref.gather_paged_kv(kc, block_tab, kv_span, scale=ks)
+            vd = ref.gather_paged_kv(vc, block_tab, kv_span, scale=vs)
+            out = ops.flash_attention(
+                q, kd, vd, causal=causal, window=window,
+                softcap=cfg.attn_logit_softcap, kv_len=pos + s,
+                q_offset=pos)
+            out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            return out, {"k": kc, "v": vc, "k_scale": ks, "v_scale": vs}
         else:
             kc = _paged_scatter(cache["k"], k, block_tab, positions)
             vc = _paged_scatter(cache["v"], v, block_tab, positions)
@@ -170,6 +186,20 @@ def attention_forward(
         q = layers.apply_rope(q, cos, sin, rot)
         k = layers.apply_rope(k, cos, sin, rot)
     kv_len = pos + 1
+    if block_tab is not None and "k_scale" in cache:
+        # int8 paged: quantize-on-append (per-page scales grow
+        # monotonically, fresh pages reset), dequant fused into the
+        # attention backends via the scale operands
+        kc, ks = quant.paged_scatter_quant(
+            cache["k"], cache["k_scale"], k, block_tab, pos[:, None])
+        vc, vs = quant.paged_scatter_quant(
+            cache["v"], cache["v_scale"], v, block_tab, pos[:, None])
+        out = ops.paged_decode_attention(
+            q[:, 0], kc, vc, block_tab, kv_len, kv_span=kv_span,
+            window=window, softcap=cfg.attn_logit_softcap,
+            k_scale=ks, v_scale=vs)
+        out = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+        return out, {"k": kc, "v": vc, "k_scale": ks, "v_scale": vs}
     if block_tab is not None:
         # paged: scatter the new token into its slot's page, attend
         # through the block table (gather backend is bit-identical to
@@ -320,8 +350,15 @@ def cross_attention_forward(
 
 
 def make_attn_cache_spec(cfg: ModelConfig, mixer: str, batch: int,
-                         cache_len: int, dtype=jnp.bfloat16):
-    """ShapeDtypeStructs of the per-layer cache for this mixer kind."""
+                         cache_len: int, dtype=jnp.bfloat16,
+                         kv_format: Optional[str] = None):
+    """ShapeDtypeStructs of the per-layer cache for this mixer kind.
+
+    ``kv_format="int8"`` (paged pools only) stores int8 k/v leaves plus
+    per-page-per-head fp32 dequant scales: ``batch`` is then the page
+    count and ``cache_len`` the page size, so the scale leaves are
+    ``(P, KV)`` riding the same pytree as the payload.
+    """
     if mixer == "mla":
         m = cfg.mla
         return {
@@ -332,6 +369,13 @@ def make_attn_cache_spec(cfg: ModelConfig, mixer: str, batch: int,
         }
     hd = cfg.resolved_head_dim
     kv = cfg.num_kv_heads
+    if kv_format == "int8":
+        return {
+            "k": jax.ShapeDtypeStruct((batch, cache_len, kv, hd), jnp.int8),
+            "v": jax.ShapeDtypeStruct((batch, cache_len, kv, hd), jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct((batch, kv), jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct((batch, kv), jnp.float32),
+        }
     return {
         "k": jax.ShapeDtypeStruct((batch, cache_len, kv, hd), dtype),
         "v": jax.ShapeDtypeStruct((batch, cache_len, kv, hd), dtype),

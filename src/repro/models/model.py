@@ -24,12 +24,13 @@ def _stack_specs(spec_tree, reps: int):
 
 
 def _layer_cache_spec(cfg: ModelConfig, mixer: str, batch: int,
-                      cache_len: int, dtype, enc_len: Optional[int]):
+                      cache_len: int, dtype, enc_len: Optional[int],
+                      kv_format: Optional[str] = None):
     if mixer == "mamba":
         spec = ssm.make_mamba_cache_spec(cfg, batch, dtype)
     else:
         spec = attention.make_attn_cache_spec(cfg, mixer, batch, cache_len,
-                                              dtype)
+                                              dtype, kv_format=kv_format)
     if cfg.encdec and enc_len is not None:
         hd = cfg.resolved_head_dim
         kv = cfg.num_kv_heads
@@ -40,20 +41,25 @@ def _layer_cache_spec(cfg: ModelConfig, mixer: str, batch: int,
 
 
 def make_cache_specs(cfg: ModelConfig, batch: int, cache_len: int,
-                     dtype=jnp.bfloat16, enc_len: Optional[int] = None):
-    """Cache pytree of ShapeDtypeStructs (blocks stacked over repeats)."""
+                     dtype=jnp.bfloat16, enc_len: Optional[int] = None,
+                     kv_format: Optional[str] = None):
+    """Cache pytree of ShapeDtypeStructs (blocks stacked over repeats).
+
+    ``kv_format="int8"`` (paged pools: batch = pages, cache_len = page
+    size) adds fp32 per-page-per-head scale leaves next to int8 k/v.
+    """
     reps = transformer.scanned_repeats(cfg)
     cache: Dict[str, Any] = {
         "blocks": [
             _stack_specs(_layer_cache_spec(cfg, kind[0], batch, cache_len,
-                                           dtype, enc_len), reps)
+                                           dtype, enc_len, kv_format), reps)
             for kind in cfg.layer_pattern]
     }
     if cfg.first_k_dense:
         kinds = cfg.layer_kinds()
         cache["prefix"] = [
             _layer_cache_spec(cfg, kinds[i][0], batch, cache_len, dtype,
-                              enc_len)
+                              enc_len, kv_format)
             for i in range(cfg.first_k_dense)]
     return cache
 

@@ -142,7 +142,11 @@ def apply_layer(
 
     h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
     if mixer in ("attn", "local"):
-        sub = {k: cache[k] for k in ("k", "v")} if cache is not None else None
+        sub = None
+        if cache is not None:
+            keys = (("k", "v", "k_scale", "v_scale")
+                    if "k_scale" in cache else ("k", "v"))
+            sub = {k: cache[k] for k in keys}
         out, nc = attention.attention_forward(
             p["attn"], h, cfg, mixer=mixer, mode=mode, cache=sub, pos=pos,
             causal=causal, ctx=ctx, block_tab=block_tab, kv_span=kv_span)

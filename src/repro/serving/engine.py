@@ -350,10 +350,15 @@ class RagdollEngine:
         stats = self.retrieval_stats
         ranking = stats.hot_ranking()
         paged = getattr(self.generator, "paged", False)
+        # the live pool format is the market's bits-per-token dimension:
+        # an int8 generator clears ~4x the pages out of the same byte
+        # grant (the policy boundary is where the knob meets pricing)
         split = self.opt.market(
             placement,
             page_size=self.generator.page_size if paged else None,
-            partition_heat=stats.heat())
+            partition_heat=stats.heat(),
+            kv_format=getattr(self.generator, "kv_format", None)
+            if paged else None)
         if self.continuous:
             # dynamic capacity: grow/shrink the slot table with the live
             # placement's gen_batch; paged generators also retarget their

@@ -378,6 +378,7 @@ class ContinuousGenerator(_GeneratorBase):
                  host_page_budget: Optional[int] = None,
                  prefix_cache: bool = False,
                  prefix_page_budget: Optional[int] = None,
+                 kv_format: Optional[str] = None,
                  tracer=None, registry=None):
         super().__init__(cfg, params, gen_cfg, streamed=streamed,
                          policy=policy)
@@ -411,10 +412,13 @@ class ContinuousGenerator(_GeneratorBase):
         self.swap_outs = 0
         self.swap_ins = 0
         self.peak_in_flight = 0
+        if kv_format is not None and not paged:
+            raise ValueError("kv_format requires paged=True")
         if paged:
             self.kv: Optional[PagedKVCache] = PagedKVCache(
                 cfg, num_slots, total, page_size, num_pages=page_budget,
                 dtype=gen_cfg.dtype, host_pages=host_page_budget,
+                kv_format=kv_format,
                 tracer=self.tracer, registry=self.registry)
             if streamed:
                 self.caches = self.kv.init_layered(self.exec.layer_kinds())
@@ -463,6 +467,16 @@ class ContinuousGenerator(_GeneratorBase):
         for s in slots:
             ids.update(self._slot_scope.get(s, ()))
         return sorted(ids, key=str)
+
+    @property
+    def kv_format(self) -> str:
+        """The live KV byte format ("fp32"/"bf16"/"int8"): derived from
+        the paged pool, else from the dense cache dtype — the source of
+        truth the cost model's bits-per-token pricing must track."""
+        if self.kv is not None:
+            return self.kv.kv_format
+        return ("bf16" if jnp.dtype(self.gen_cfg.dtype) == jnp.bfloat16
+                else "fp32")
 
     @property
     def free_slots(self) -> int:
@@ -855,6 +869,14 @@ class ContinuousGenerator(_GeneratorBase):
                                                       self.cache, pos)
             nxt = np.asarray(jnp.argmax(logits,
                                         axis=-1)).astype(np.int32)
+        if (self.paged and self.registry.enabled
+                and self.kv.kv_format == "int8"):
+            # dequant traffic: this step's fused kernel read every live
+            # slot's full quantized context (int8 payload bytes)
+            toks = sum(int(self._pos[r.index]) + 1 for r in refs)
+            self.registry.counter("kv.dequant_bytes").inc(
+                toks * self.cfg.kv_cache_bytes_per_token(1))
+            self.registry.counter("kv.dequant_tokens").inc(toks)
         for ref in refs:
             self._emit(ref, int(nxt[ref.index]))
         self.steps += 1

@@ -91,6 +91,12 @@ from repro.obs.trace import NULL_TRACER
 
 TRASH_PAGE = 0
 
+# bytes per KV element for each pool format ("int8" additionally carries
+# fp32 per-page-per-head scale leaves; see ``kernels/quant.py``)
+KV_FORMAT_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+KV_FORMAT_DTYPE = {"fp32": jnp.float32, "bf16": jnp.bfloat16,
+                   "int8": jnp.int8}
+
 
 class PageExhausted(RuntimeError):
     """The pool cannot supply the pages a live sequence needs."""
@@ -608,6 +614,7 @@ class PagedKVCache:
     def __init__(self, cfg: ModelConfig, num_slots: int, total_len: int,
                  page_size: int, num_pages: Optional[int] = None,
                  dtype=jnp.float32, host_pages: Optional[int] = None,
+                 kv_format: Optional[str] = None,
                  tracer=None, registry=None):
         _attn_only_kinds(cfg)
         self.cfg = cfg
@@ -621,17 +628,33 @@ class PagedKVCache:
         # host swap tier: default sizes it to park every slot worst-case
         self.host = HostPagePool(worst if host_pages is None else host_pages,
                                  page_size)
-        self.dtype = dtype
+        if kv_format is None:
+            kv_format = ("bf16" if jnp.dtype(dtype) == jnp.bfloat16
+                         else "fp32")
+        if kv_format not in KV_FORMAT_BYTES:
+            raise ValueError(f"unknown kv_format {kv_format!r} "
+                             f"(expected one of {sorted(KV_FORMAT_BYTES)})")
+        self.kv_format = kv_format
+        # pool leaves follow the format; int8 leaves are built by the
+        # cache-spec path (int8 payload + fp32 scale leaves)
+        self.dtype = (KV_FORMAT_DTYPE[kv_format] if kv_format != "int8"
+                      else dtype)
         self.tracer = tracer or NULL_TRACER
         self.registry = registry or NULL_REGISTRY
         self._page_nbytes: Optional[int] = None
         self._tab = np.zeros((num_slots, self.nmax), np.int32)  # TRASH_PAGE
         self._tab_dev: Optional[jnp.ndarray] = None
+        # format-dependent DMA accounting (plain ints: deterministic for
+        # benchmarks even with a NULL registry)
+        self.swap_out_bytes = 0
+        self.swap_in_bytes = 0
 
     def page_nbytes(self, pools) -> int:
         """Physical bytes one page occupies across every pool leaf
         (lazy: derived from the live arrays on first use, so it tracks
-        whatever dtype/layout the caller actually allocated)."""
+        whatever dtype/format the caller actually allocated — int8 pools
+        count their int8 payload plus the fp32 scale rows, never a
+        modeled 2-byte figure)."""
         if self._page_nbytes is None:
             total = 0
             for leaf, axis in _pool_leaves(pools):
@@ -640,17 +663,27 @@ class PagedKVCache:
             self._page_nbytes = total
         return self._page_nbytes
 
+    def pool_nbytes(self, pools) -> int:
+        """Total physical bytes of every pool leaf (the regression tests
+        pin ``pool_nbytes == page_nbytes * array_pages`` per format)."""
+        return sum(int(leaf.nbytes) for leaf, _ in _pool_leaves(pools))
+
     # ------------------------------------------------------ array builders
     @property
     def array_pages(self) -> int:
         """Leading pool-array dim: usable pages + the trash page row 0."""
         return self.pool.capacity + 1
 
+    @property
+    def _spec_format(self) -> Optional[str]:
+        return "int8" if self.kv_format == "int8" else None
+
     def init_stacked(self):
         """Pooled cache pytree for the scan-based ``Model`` path."""
         from repro.models import model as M
         specs = M.make_cache_specs(self.cfg, self.array_pages,
-                                   self.page_size, self.dtype)
+                                   self.page_size, self.dtype,
+                                   kv_format=self._spec_format)
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
 
     def init_layered(self, kinds: Sequence) -> List[dict]:
@@ -659,7 +692,8 @@ class PagedKVCache:
         out = []
         for kind in kinds:
             spec = M._layer_cache_spec(self.cfg, kind[0], self.array_pages,
-                                       self.page_size, self.dtype, None)
+                                       self.page_size, self.dtype, None,
+                                       kv_format=self._spec_format)
             out.append(jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                     spec))
         return out
@@ -755,9 +789,10 @@ class PagedKVCache:
             self.pool.swap_out(slot)
             self._tab[slot, :] = TRASH_PAGE
             self._tab_dev = None
+        nbytes = len(dev) * self.page_nbytes(pools)
+        self.swap_out_bytes += nbytes
         self.registry.counter("kv.swap_out_pages").inc(len(dev))
-        self.registry.counter("kv.swap_out_bytes").inc(
-            len(dev) * self.page_nbytes(pools))
+        self.registry.counter("kv.swap_out_bytes").inc(nbytes)
         return True
 
     def swap_in(self, pools, slot: int, handle: Any):
@@ -777,9 +812,10 @@ class PagedKVCache:
             self._tab[slot, :] = TRASH_PAGE
             self._tab[slot, :blocks] = new
             self._tab_dev = None
+        nbytes = blocks * self.page_nbytes(pools)
+        self.swap_in_bytes += nbytes
         self.registry.counter("kv.swap_in_pages").inc(blocks)
-        self.registry.counter("kv.swap_in_bytes").inc(
-            blocks * self.page_nbytes(pools))
+        self.registry.counter("kv.swap_in_bytes").inc(nbytes)
         return pools
 
     def set_host_budget(self, pages: int) -> int:
@@ -787,14 +823,55 @@ class PagedKVCache:
         return self.host.resize(pages)
 
     # ------------------------------------------------------------ scatter
+    def _quant_block(self, block, row, pages, offs, length: int,
+                     stacked: bool):
+        """Quantize a dense fp32 prefill row dict into an int8 block
+        dict (the row cache carries no scale leaves, so the tree
+        structures differ — handled key-wise, not by ``tree.map``)."""
+        from repro.kernels import quant
+        out = dict(block)
+        for base in ("k", "v"):
+            r = (row[base][:, :, :length] if stacked
+                 else row[base][:, :length])
+            pool, scale = quant.quantize_rows(
+                block[base], block[base + "_scale"], r, pages, offs)
+            out[base] = pool
+            out[base + "_scale"] = scale
+        return out
+
+    def _count_quant(self, length: int) -> None:
+        self.registry.counter("kv.quant_bytes").inc(
+            length * self.cfg.kv_cache_bytes_per_token(1))
+        self.registry.counter("kv.quant_tokens").inc(length)
+
     def scatter_row_stacked(self, cache, row_cache, slot: int,
                             length: int):
         """Scatter a batch=1 dense prefill row's ``[0:length]`` prefix
-        into the slot's pages (stacked ``{"blocks","prefix"}`` layout)."""
+        into the slot's pages (stacked ``{"blocks","prefix"}`` layout).
+
+        Int8 pools quantize on append: every touched page is written
+        from offset 0 (a fresh lease), so per-page scales are
+        reset-then-set (see ``kernels/quant.py``)."""
         self.ensure(slot, length)
         pages, offs = self._page_index(slot, length)
 
         new = dict(cache)
+        if self.kv_format == "int8":
+            with self.tracer.span("kv.quant_append", slot=slot,
+                                  tokens=length):
+                new["blocks"] = [
+                    self._quant_block(bc, rc, pages, offs, length,
+                                      stacked=True)
+                    for bc, rc in zip(cache["blocks"],
+                                      row_cache["blocks"])]
+                if "prefix" in cache:
+                    new["prefix"] = [
+                        self._quant_block(bc, rc, pages, offs, length,
+                                          stacked=False)
+                        for bc, rc in zip(cache["prefix"],
+                                          row_cache["prefix"])]
+            self._count_quant(length)
+            return new
         new["blocks"] = jax.tree.map(
             lambda t, r: t.at[:, pages, offs].set(
                 r[:, 0, :length].astype(t.dtype)),
@@ -811,6 +888,14 @@ class PagedKVCache:
         """Same, for the per-layer list layout of ``StreamedExecutor``."""
         self.ensure(slot, length)
         pages, offs = self._page_index(slot, length)
+        if self.kv_format == "int8":
+            with self.tracer.span("kv.quant_append", slot=slot,
+                                  tokens=length):
+                out = [self._quant_block(tc, rc, pages, offs, length,
+                                         stacked=False)
+                       for tc, rc in zip(caches, row_caches)]
+            self._count_quant(length)
+            return out
         return [
             jax.tree.map(
                 lambda t, r: t.at[pages, offs].set(

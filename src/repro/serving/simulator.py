@@ -84,6 +84,11 @@ class SimConfig:
     # over-committing KV memory
     paged: bool = False
     page_size: int = 16
+    # live KV pool format (paged modelling): prices the page budget and
+    # the swap DMA at the real leaf bytes — "int8" clears ~4x the pages
+    # out of the same placement byte grant and shrinks preemption PCIe
+    # cost by the same factor (None: the cost model's own format)
+    kv_format: Optional[str] = None
     # swap-to-host preemption (paged only): a page-starved join may park
     # the longest-remaining live slot host-side (budget = the placement's
     # c_cpu KV share in pages) at a whole-page PCIe latency cost, instead
@@ -204,7 +209,8 @@ class ServingSimulator:
             heat = [(1.0 / r) ** self.sim.zipf_alpha
                     for r in range(1, self.cost.num_partitions + 1)]
             self._market_cache[p] = self.opt.market(
-                p, page_size=self.sim.page_size, partition_heat=heat)
+                p, page_size=self.sim.page_size, partition_heat=heat,
+                kv_format=self.sim.kv_format)
         return self._market_cache[p]
 
     def _ret_time(self, b: int, resident: int,
@@ -339,10 +345,13 @@ class ServingSimulator:
             # floor of one request so a tiny placement can still progress
             # (plus the cache's holds, which are not reclaimable here)
             floor = req_pages + (shared_pages if s.prefix_cache else 0)
-            return max(self.opt.kv_page_budget(p, s.page_size), floor)
+            return max(self.opt.kv_page_budget(p, s.page_size,
+                                               kv_format=s.kv_format),
+                       floor)
 
         def host_budget(p: Placement) -> int:
-            return (self.opt.kv_host_page_budget(p, s.page_size)
+            return (self.opt.kv_host_page_budget(p, s.page_size,
+                                                 kv_format=s.kv_format)
                     if s.swap else 0)
 
         cap = {"b": 1, "p": self._placement(1), "steps": 0,
@@ -452,7 +461,8 @@ class ServingSimulator:
                     if s.paged:
                         cap["reserved"] += shared_pages
             if swap_pages:  # whole-page DMA over PCIe rides it too
-                dur += self.cost.kv_swap_time(swap_pages, s.page_size)
+                dur += self.cost.kv_swap_time(swap_pages, s.page_size,
+                                              kv_format=s.kv_format)
             gpu_busy += dur
             for slot in active:          # one token per live slot
                 slot[1] -= 1

@@ -1,0 +1,496 @@
+"""int8-quantized KV pages: kernel parity, end-to-end greedy identity,
+quantized swap round trips, scale survival, and dtype byte accounting.
+
+Headline contracts:
+
+* **Kernel parity battery** — the int8 paged-attention path (naive /
+  gather / pallas) stays within ``LOGIT_BOUND`` of the fp32 ``ref``
+  oracle on random pools quantized at per-(page, kv_head) symmetric
+  scales, and the three backends agree with each other far tighter
+  (they share one dequant contract).
+
+* **End-to-end greedy identity** — decode with int8 KV is
+  token-identical to fp32 KV over a >= 32-token horizon on both the
+  scan-based ``Model`` path and the ``StreamedExecutor`` path,
+  including chunked prefill.  Lossy quantization can only flip a
+  greedy argmax where the fp32 decision margin is below the
+  quantization noise floor, so the pinned workload is
+  margin-selected: every prompt's fp32 trajectory keeps a top-1/top-2
+  logit gap above ``LOGIT_BOUND`` at every decode step (verified by
+  ``test_pinned_prompts_have_margin``), which makes the identity
+  robust rather than a seed-lottery win.
+
+* **Quantized swap round trips** — ``swap_out``/``swap_in`` move the
+  int8 payload AND the fp32 per-page scale rows as whole-leaf page
+  copies, so preempt/resume cycles under memory pressure never change
+  a single output token.
+
+* **Byte accounting** (the 2x bugfix, pinned) — ``pool_nbytes ==
+  page_nbytes * array_pages`` for fp32/bf16/int8 pools, the live leaf
+  bytes match ``ModelProfile.kv_page_bytes`` per format, the same
+  device-byte grant priced at the real fp32 pool format funds half
+  the pages the historical 2-byte mispricing promised, and
+  ``benchmarks.common.cost_model`` now prices at the format the
+  engines allocate.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.costmodel import PF_HIGH, CostModel, ModelProfile
+from repro.core.placement import Placement, PlacementOptimizer
+from repro.kernels import ops, ref
+from repro.kernels.quant import paged_scatter_quant
+from repro.models.model import Model
+from repro.serving.generator import ContinuousGenerator, GeneratorConfig
+from repro.serving.kvpool import PagedKVCache, _pool_leaves
+
+# Max |logit| error of the int8 paged path vs the fp32 oracle on random
+# N(0,1) pools (measured ~0.012 on the fixture below; the bound leaves
+# ~2x headroom).  The margin-selected e2e prompts keep their fp32
+# decision gaps above this, which is what makes greedy identity exact.
+LOGIT_BOUND = 0.025
+
+# Margin-selected e2e workload: with random-init weights the reduced
+# model's logits are tie-dense (top-2 spacing of ~500 near-iid values),
+# so arbitrary prompts WILL flip an argmax under ~1e-2 quantization
+# noise somewhere in a 34-step horizon.  These four prompts were
+# selected so each fp32 greedy trajectory keeps its top-1/top-2 gap
+# above LOGIT_BOUND at every step (asserted below, not just assumed).
+E2E_PROMPTS = [
+    "seed8 request 3 about retrieval topic 59",
+    "seed5 request 2 about retrieval topic 37",
+    "seed8 request 0 about retrieval topic 56",
+    "seed9 request 0 about retrieval topic 63",
+]
+E2E_CTX, E2E_HORIZON = 30, 34          # horizon >= 32 tokens
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    params = Model(cfg, remat=False).init(jax.random.PRNGKey(0),
+                                          jnp.float32)
+    return cfg, params
+
+
+# ------------------------------------------------------ kernel parity
+
+def _quantize_pool(pool):
+    """Symmetric per-(page, kv_head) int8 quantization of an fp32 pool."""
+    amax = jnp.max(jnp.abs(pool), axis=(1, 3))            # (P, KV)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(pool / jnp.maximum(scale, 1e-8)[:, None, :,
+                                                           None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _paged_fixture(rng, b=3, h=8, kvh=4, d=64, page=8, nmax=5):
+    p = 1 + b * nmax
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(p, page, kvh, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(p, page, kvh, d)), jnp.float32)
+    tab = jnp.asarray(rng.permutation(np.arange(1, p))[:b * nmax]
+                      .reshape(b, nmax).astype(np.int32))
+    kv_len = jnp.asarray(rng.integers(1, page * nmax + 1, size=(b,)),
+                         jnp.int32)
+    return q, kp, vp, tab, kv_len
+
+
+@pytest.mark.parametrize("impl", ["naive", "gather", "pallas"])
+def test_int8_paged_attention_bounded_error(rng, impl):
+    """Every int8 backend lands within LOGIT_BOUND of the fp32 oracle."""
+    q, kp, vp, tab, kv_len = _paged_fixture(rng)
+    kq, ks = _quantize_pool(kp)
+    vq, vs = _quantize_pool(vp)
+    want = ref.paged_decode_attention_reference(q, kp, vp, tab, kv_len)
+    got = ops.paged_decode_attention(q, kq, vq, tab, kv_len,
+                                     k_scale=ks, v_scale=vs, impl=impl)
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < LOGIT_BOUND, err
+
+
+def test_int8_backends_agree(rng):
+    """naive / gather / pallas share one dequant contract: they agree
+    with each other to float tolerance, not just within the lossy
+    quantization bound."""
+    q, kp, vp, tab, kv_len = _paged_fixture(rng)
+    kq, ks = _quantize_pool(kp)
+    vq, vs = _quantize_pool(vp)
+    outs = {impl: np.asarray(ops.paged_decode_attention(
+                q, kq, vq, tab, kv_len, k_scale=ks, v_scale=vs,
+                impl=impl))
+            for impl in ("naive", "gather", "pallas")}
+    np.testing.assert_allclose(outs["gather"], outs["naive"],
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(outs["pallas"], outs["naive"],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_index_map_clamps_padded_blocks(rng):
+    """Block-table entries past ``kv_len`` must never be DMAed: the
+    BlockSpec index_map clamps them to the slot's last *real* page, so
+    the Pallas pipeline elides the re-fetch (consecutive grid steps at
+    the same index) instead of streaming the trash page per padded
+    block.  Referenced by the ``kernels/paged_attention.py`` docstring.
+    """
+    from repro.kernels.paged_attention import _kv_index_map
+    page = 8
+    im = _kv_index_map(page)
+    tab = jnp.asarray([[3, 7, 2, 5, 9]], jnp.int32)
+    # kv_len = 12 -> 2 real pages; blocks 2..4 are padding
+    kl = jnp.asarray([12], jnp.int32)
+    real = [int(im(0, 1, ik, tab, kl)[0]) for ik in range(5)]
+    assert real == [3, 7, 7, 7, 7]      # clamped to last real page
+    assert int(im(0, 1, 0, tab, kl)[1]) == 1   # kv-head index passthrough
+    # kv_len = 0 still resolves to a valid (slot-owned) entry, never OOB
+    assert int(im(0, 0, 4, tab, jnp.asarray([0], jnp.int32))[0]) == 3
+
+    # e2e: poison the trash page; short kv_len leaves padded blocks in
+    # every table row, and the pallas result must still match the oracle
+    q, kp, vp, tab, _ = _paged_fixture(rng)
+    kp = kp.at[0].set(1e9)
+    vp = vp.at[0].set(1e9)
+    kv_len = jnp.asarray([3, 11, 17], jnp.int32)
+    want = ref.paged_decode_attention_reference(q, kp, vp, tab, kv_len)
+    got = ops.paged_decode_attention(q, kp, vp, tab, kv_len,
+                                     impl="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_scatter_quant_roundtrip_and_monotone_scales(rng):
+    """``paged_scatter_quant`` invariants: (a) dequantized values track
+    the written fp32 values within the per-element resolution, (b)
+    appending a larger-magnitude token to a partially filled page grows
+    the scale monotonically and requantizes the page's earlier tokens
+    under the new scale, (c) untouched pages stay bit-identical."""
+    P, page, kvh, d = 6, 4, 2, 8
+    pool = jnp.zeros((P, page, kvh, d), jnp.int8)
+    scale = jnp.zeros((P, kvh), jnp.float32)
+    tab = jnp.asarray([[1, 3]], jnp.int32)
+
+    x0 = jnp.asarray(rng.normal(size=(1, 4, kvh, d)), jnp.float32)
+    pool, scale = paged_scatter_quant(
+        pool, scale, x0, tab, jnp.asarray([[0, 1, 2, 3]], jnp.int32))
+    deq = np.asarray(pool[1], np.float32) * np.asarray(scale)[1][None, :,
+                                                                None]
+    res = np.asarray(scale)[1][None, :, None] / 2 + 1e-6
+    assert np.all(np.abs(deq - np.asarray(x0[0])) <= res)
+
+    page1_before = np.asarray(pool[3]).copy()
+    s_before = np.asarray(scale)[1].copy()
+    # append a 10x token at offset 0 of page index 1 (fresh page: its
+    # scale row resets, page 1's row must be untouched)
+    big = jnp.asarray(10 * rng.normal(size=(1, 1, kvh, d)), jnp.float32)
+    pool, scale = paged_scatter_quant(pool, scale, big, tab,
+                                      jnp.asarray([[4]], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(pool[1]),
+                                  np.asarray(
+                                      jnp.clip(jnp.round(
+                                          x0[0] / jnp.maximum(
+                                              scale[1], 1e-8)[None, :,
+                                                              None]),
+                                          -127, 127).astype(jnp.int8)))
+    np.testing.assert_array_equal(np.asarray(scale)[1], s_before)
+    assert not np.array_equal(np.asarray(pool[3]), page1_before)
+
+    # non-fresh append at offset 1 with larger magnitude: the page's
+    # scale grows monotonically and offset-0 requantizes under it
+    s3 = np.asarray(scale)[3].copy()
+    bigger = jnp.asarray(20 * rng.normal(size=(1, 1, kvh, d)),
+                         jnp.float32)
+    pool, scale = paged_scatter_quant(pool, scale, bigger, tab,
+                                      jnp.asarray([[5]], jnp.int32))
+    assert np.all(np.asarray(scale)[3] >= s3 - 1e-12)
+    deq0 = np.asarray(pool[3, 0], np.float32) * np.asarray(scale)[3][:,
+                                                                     None]
+    res3 = np.asarray(scale)[3][:, None] * 0.75 + 1e-6  # requant adds
+    assert np.all(np.abs(deq0 - np.asarray(big[0, 0])) <= res3)
+
+
+# ------------------------------------------- end-to-end greedy identity
+
+def _run_gen(cfg, params, kv_format, streamed=False, prefill_chunk=None,
+             prompts=E2E_PROMPTS, ctx=E2E_CTX, max_new=E2E_HORIZON):
+    gen = ContinuousGenerator(
+        cfg, params, GeneratorConfig(ctx_len=ctx, max_new_tokens=max_new,
+                                     dtype=jnp.float32),
+        num_slots=3, streamed=streamed, paged=True, page_size=8,
+        kv_format=kv_format, prefill_chunk=prefill_chunk)
+    return gen.run(prompts)
+
+
+def test_pinned_prompts_have_margin(tiny_model):
+    """The identity contract below is only honest if the pinned fp32
+    trajectories never decide by less than the quantization noise —
+    verify the margin instead of trusting the selection."""
+    cfg, params = tiny_model
+    from repro.models.model import init_cache
+    from repro.serving.generator import HashTokenizer
+    tok = HashTokenizer(cfg.vocab_size)
+    m = Model(cfg, remat=False)
+    b = len(E2E_PROMPTS)
+    toks = jnp.asarray(np.stack([tok.encode(p, E2E_CTX)
+                                 for p in E2E_PROMPTS]))
+    cache = init_cache(cfg, b, E2E_CTX + E2E_HORIZON, jnp.float32)
+    pre = jax.jit(m.prefill)
+    dec = jax.jit(m.decode)
+    logits, cache = pre(params, toks, cache)
+    min_gap = np.inf
+    for t in range(E2E_HORIZON):
+        lf = np.asarray(logits)
+        top2 = np.sort(lf, axis=-1)[:, -2:]
+        min_gap = min(min_gap, float((top2[:, 1] - top2[:, 0]).min()))
+        cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        if t == E2E_HORIZON - 1:
+            break
+        logits, cache = dec(params, cur, cache,
+                            jnp.full((b,), E2E_CTX + t, jnp.int32))
+    assert min_gap > LOGIT_BOUND * 0.6, min_gap
+
+
+def test_int8_greedy_token_identical_e2e(tiny_model):
+    """>= 32-token greedy horizons: int8 KV == fp32 KV, on the Model
+    and Streamed paths, with and without chunked prefill."""
+    cfg, params = tiny_model
+    want = _run_gen(cfg, params, None)
+    assert all(len(t.split()) >= 32 for t in want)   # real horizon
+    for kw in ({}, {"prefill_chunk": 8}, {"streamed": True},
+               {"streamed": True, "prefill_chunk": 8}):
+        got = _run_gen(cfg, params, "int8", **kw)
+        assert got == want, kw
+
+
+# -------------------------------------------- quantized swap round trip
+
+def _run_with_preemption(cont, prompts, preempt_every=3, park_ticks=2):
+    """Forcibly preempt a victim every few ticks and resume it a couple
+    of ticks later (mirrors tests/test_swap.py's driver)."""
+    pending = list(enumerate(prompts))[::-1]
+    results = [None] * len(prompts)
+    parked = []
+    tick = cycles = 0
+    while pending or cont.active_slots or cont.parked_slots:
+        for due, handle in list(parked):
+            if tick >= due and cont.resume(handle) is not None:
+                parked.remove((due, handle))
+                cycles += 1
+        while pending and cont.admit_capacity > 0:
+            key, prompt = pending.pop()
+            assert cont.join(key, prompt) is not None
+        if tick % preempt_every == preempt_every - 1:
+            victim = cont.swap_victim()
+            if victim is not None:
+                handle = cont.preempt(victim)
+                if handle is not None:
+                    parked.append((tick + park_ticks, handle))
+        cont.step()
+        for key, text, _ in cont.harvest():
+            results[key] = text
+        tick += 1
+        assert tick < 500, "preemption driver stalled"
+    return results, cycles
+
+
+def test_int8_swap_roundtrip_token_identity(tiny_model):
+    """Preempt->resume cycles on an int8 pool are invisible in the
+    outputs: the swap DMA moves the int8 payload and the fp32 scale
+    rows together, bit-exactly, and the resumed slot's (new) pages
+    dequantize identically."""
+    cfg, params = tiny_model
+    prompts = [f"query {i} topic{i % 3} alpha beta" for i in range(6)]
+    g = GeneratorConfig(ctx_len=16, max_new_tokens=5, dtype=jnp.float32)
+    base = ContinuousGenerator(cfg, params, g, num_slots=3,
+                               streamed=False, paged=True, page_size=4,
+                               kv_format="int8").run(prompts)
+    cont = ContinuousGenerator(cfg, params, g, num_slots=3,
+                               streamed=False, paged=True, page_size=4,
+                               kv_format="int8")
+    got, cycles = _run_with_preemption(cont, prompts)
+    assert cycles >= 1                      # preemption actually happened
+    assert cont.kv.swap_out_bytes > 0
+    assert cont.kv.swap_in_bytes > 0
+    assert got == base
+    # the DMA counters report the real int8 leaf bytes, not a modeled
+    # fp32/bf16 figure: whole pages moved * physical page bytes
+    page_nbytes = cont.kv.page_nbytes(cont.cache)
+    assert cont.kv.swap_out_bytes % page_nbytes == 0
+    assert cont.kv.swap_in_bytes % page_nbytes == 0
+
+
+# -------------------------------------- scales survive preempt/resume+CoW
+
+try:        # pinned in requirements.txt; only this property suite skips
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _slot_view(kv, pools, slot):
+    """Bitwise snapshot of every pool leaf's rows for ``slot``'s pages
+    (int8 payload AND fp32 scale rows), in logical block order."""
+    tab = np.asarray(kv.pool.table(slot))
+    return [np.asarray(jnp.take(leaf, tab, axis=axis))
+            for leaf, axis in _pool_leaves(pools)]
+
+
+if HAVE_HYPOTHESIS:
+    _scales_property = lambda f: settings(          # noqa: E731
+        max_examples=25, deadline=None)(
+        given(seed=st.integers(0, 2 ** 16), ops_seq=st.lists(
+            st.sampled_from(["swap", "cow", "write"]),
+            min_size=1, max_size=8))(f))
+else:
+    _scales_property = pytest.mark.skip(
+        reason="hypothesis not installed")
+
+
+@_scales_property
+def test_scales_survive_preempt_resume_and_cow(seed=0, ops_seq=("swap",)):
+    """Property: whatever interleaving of preempt/resume round trips,
+    CoW detaches, and further quantized appends a slot experiences, its
+    logical pages (int8 payload + per-page scale rows) always read back
+    bit-identically to the last write."""
+    cfg = get_config("llama3-8b").reduced(num_layers=1)
+    kv = PagedKVCache(cfg, num_slots=2, total_len=16, page_size=4,
+                      kv_format="int8")
+    pools = kv.init_stacked()
+    rng = np.random.default_rng(seed)
+    from repro.models.model import make_cache_specs
+    row_spec = make_cache_specs(cfg, 1, 16, jnp.float32)
+
+    def write(slot, length):
+        row = jax.tree.map(
+            lambda s: jnp.asarray(rng.normal(size=s.shape), s.dtype),
+            row_spec)
+        return kv.scatter_row_stacked(pools, row, slot, length)
+
+    assert kv.admit(0, 16)
+    length = int(rng.integers(1, 17))
+    pools = write(0, length)
+    snap = _slot_view(kv, pools, 0)
+    parked = False
+    for op in ops_seq:
+        if op == "swap" and not parked:
+            assert kv.swap_out(pools, 0, "h0")
+            out = kv.swap_in(pools, 0, "h0")
+            if out is None:
+                parked = True       # device pool momentarily too full
+                continue
+            pools = out
+        elif op == "cow" and not parked:
+            blocks = len(kv.pool.table(0))
+            block = int(rng.integers(0, blocks))
+            page = kv.pool.table(0)[block]
+            kv.pool.incref(page)    # simulate a prefix-cache hold
+            try:
+                pools, copied = kv.cow_block(pools, 0, block)
+                assert copied
+            finally:
+                kv.pool.decref(page)
+        elif op == "write" and not parked:
+            length = int(rng.integers(1, 17))
+            pools = write(0, length)
+            snap = _slot_view(kv, pools, 0)
+        view = _slot_view(kv, pools, 0)
+        for a, b in zip(snap, view):
+            np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------- dtype byte accounting
+
+@pytest.mark.parametrize("fmt,dtype_bytes", [("fp32", 4), ("bf16", 2),
+                                             ("int8", 1)])
+def test_pool_nbytes_matches_priced_page_bytes(fmt, dtype_bytes):
+    """The regression that closes the 2x hole: the bytes the cost model
+    prices for one page equal the physical leaf bytes the pool
+    allocates, for every format — and the whole pool is exactly
+    page_nbytes * array_pages."""
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    page = 8
+    kv = PagedKVCache(cfg, num_slots=2, total_len=16, page_size=page,
+                      kv_format=fmt)
+    cache = kv.init_stacked()
+    assert kv.pool_nbytes(cache) == kv.page_nbytes(cache) * kv.array_pages
+    mp = ModelProfile.from_config(cfg, kv_format=fmt)
+    assert kv.page_nbytes(cache) == mp.kv_page_bytes(page)
+    assert mp.kv_bytes_per_token == cfg.kv_cache_bytes_per_token(
+        dtype_bytes)
+
+
+def test_fp32_page_budget_halves_vs_mispriced():
+    """The same device-byte figure, priced at the real fp32 pool format,
+    funds ~half the pages the historical 2-byte default promised — and
+    ``kv_swap_time`` prices DMA from the same source, so capacity and
+    swap cost can never disagree again."""
+    cfg = get_config("llama3-70b")
+    mp = ModelProfile.from_config(cfg)          # legacy 2-byte pricing
+    cm = CostModel(PF_HIGH, mp, partition_bytes=8 * 1024 ** 3,
+                   num_partitions=32)
+    opt = PlacementOptimizer(cm)
+    p = Placement(w_gpu=0.25, w_cpu=0.75, c_gpu=0.5, c_cpu=0.5,
+                  resident_partitions=4, gen_batch=8)
+    mispriced = opt.kv_page_budget(p)
+    repriced = opt.kv_page_budget(p, kv_format="fp32")
+    assert repriced == mispriced // 2
+    # swap DMA shares the source: fp32 pages take 2x the PCIe time the
+    # 2-byte figure claimed, int8 pages ~4x less than fp32
+    t_bf16 = cm.kv_swap_time(4, 16)
+    t_fp32 = cm.kv_swap_time(4, 16, kv_format="fp32")
+    t_int8 = cm.kv_swap_time(4, 16, kv_format="int8")
+    assert t_fp32 == pytest.approx(2 * t_bf16)
+    assert t_int8 < t_fp32 / 3
+    # and the market's clearing carries the dimension it priced at
+    split32 = opt.market(p, kv_format="fp32")
+    split8 = opt.market(p, kv_format="int8")
+    assert split32.kv_format == "fp32" and split8.kv_format == "int8"
+    assert split8.bits_per_token < split32.bits_per_token / 3
+    assert split8.kv_page_budget >= 1.8 * split32.kv_page_budget
+    assert (split8.kv_page_budget * split8.page_bytes + split8.hot_bytes
+            <= split8.total_bytes + 1e-6)
+
+
+def test_benchmark_cost_model_prices_engine_format():
+    """No caller hard-codes 2-byte KV anymore: the shared benchmark
+    cost model prices at the fp32 format the engines allocate
+    (GeneratorConfig.dtype default)."""
+    root = Path(__file__).resolve().parent.parent
+    if str(root) not in sys.path:
+        sys.path.insert(0, str(root))
+    from benchmarks.common import cost_model
+    cm = cost_model("llama3-8b")
+    assert cm.mp.kv_format == "fp32"
+    cfg = get_config("llama3-8b")
+    assert cm.mp.kv_bytes_per_token == cfg.kv_cache_bytes_per_token(4)
+
+
+def test_generator_kv_format_knob_and_counters(tiny_model):
+    """The policy-boundary knob: a paged generator exposes its live pool
+    format, rejects the knob without paging, and the obs registry sees
+    quant/dequant byte counters when int8 is on."""
+    from repro.obs import MetricsRegistry
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=16, max_new_tokens=4, dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        ContinuousGenerator(cfg, params, g, kv_format="int8")
+    reg = MetricsRegistry()
+    gen = ContinuousGenerator(cfg, params, g, num_slots=2, paged=True,
+                              page_size=4, kv_format="int8",
+                              registry=reg)
+    assert gen.kv_format == "int8"
+    gen.run(["one small prompt", "another prompt"])
+    snap = reg.snapshot()
+    assert snap["counters"]["kv.quant_tokens"] > 0
+    assert snap["counters"]["kv.quant_bytes"] > 0
+    assert snap["counters"]["kv.dequant_bytes"] > 0
+    fp32 = ContinuousGenerator(cfg, params, g, num_slots=2, paged=True,
+                               page_size=4)
+    assert fp32.kv_format == "fp32"
