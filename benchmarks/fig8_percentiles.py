@@ -38,7 +38,8 @@ def _drive_deterministic(eng, reqs):
 
 def engine_rows(n_requests: int = 10, num_slots: int = 3,
                 variants=("dense", "paged", "paged_tight", "paged_swap",
-                          "paged_int8", "prefix_off", "prefix_on"),
+                          "paged_int8", "priority_mix", "swap_overlap",
+                          "prefix_off", "prefix_on"),
                 tracer=None, registry=None):
     """Continuous-trace percentiles from the real mini-engine.
 
@@ -73,6 +74,21 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
     from cached pages) and ``cow`` (copy-on-write detaches).  CI
     asserts ``prefix_on`` prefills strictly fewer tokens per request
     than ``prefix_off`` with a nonzero hit count.
+
+    ``priority_mix`` reuses the ``paged_swap`` starved budget but tags
+    the two LAST-arriving requests interactive (``priority=1``): the
+    ``RequestScheduler`` admits them ahead of the whole FIFO backlog
+    and batch joiners may never evict them (victims are limited to the
+    joiner's own class or below), so they finish first despite arriving
+    last.  The row reports per-class percentiles (``int_p95`` /
+    ``batch_p95`` — CI asserts interactive p95 is strictly lower).
+
+    ``swap_overlap`` reruns ``paged_swap`` with the generator's async
+    transfer worker (``overlap_swap=True``): decode of unaffected slots
+    proceeds during swap DMA, so ``stall=`` (wall-clock actually
+    blocked on swap copies, ``kv.swap_stall_s``) drops strictly below
+    the inline ``paged_swap`` row's at the same swap count (CI asserts
+    both).
     """
     import jax
     import jax.numpy as jnp
@@ -105,11 +121,13 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
             prefix = variant.startswith("prefix")
             if variant == "paged":
                 kw = dict(paged=True, prefill_chunk=16)
-            elif variant in ("paged_tight", "paged_swap"):
+            elif variant in ("paged_tight", "paged_swap", "priority_mix",
+                             "swap_overlap"):
                 kw = dict(paged=True, page_budget=2 * worst,
-                          host_page_budget=(num_slots * worst
-                                            if variant == "paged_swap"
-                                            else 0))
+                          host_page_budget=(0 if variant == "paged_tight"
+                                            else num_slots * worst))
+                if variant == "swap_overlap":
+                    kw["overlap_swap"] = True
             elif variant == "paged_int8":
                 # the same device-byte grant as paged_tight, spent on
                 # int8 pages (payload + fp32 scale rows) — the byte
@@ -139,7 +157,8 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
                                 registry=(registry
                                           if registry.enabled else None))
             deterministic = variant in ("paged_tight", "paged_swap",
-                                        "paged_int8") or prefix
+                                        "paged_int8", "priority_mix",
+                                        "swap_overlap") or prefix
             # shared-prefix workload: every request asks the same query,
             # so retrieval assembles identical prompts
             queries = ["recurring shared question" if prefix
@@ -147,7 +166,10 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
             if deterministic:
                 try:
                     reqs = [Request(rid=i, query=q,
-                                    arrival=time.perf_counter())
+                                    arrival=time.perf_counter(),
+                                    priority=(1 if variant == "priority_mix"
+                                              and i >= n_requests - 2
+                                              else 0))
                             for i, q in enumerate(queries)]
                     reqs = _drive_deterministic(eng, reqs)
                 finally:
@@ -177,6 +199,16 @@ def engine_rows(n_requests: int = 10, num_slots: int = 3,
                     info += (f" budget={gen.kv.pool.capacity}"
                              f" swap_bytes={gen.kv.swap_out_bytes + gen.kv.swap_in_bytes}"
                              f" kv_format={gen.kv_format}")
+                if variant in ("paged_swap", "swap_overlap"):
+                    # wall-clock actually blocked on swap DMA: the whole
+                    # copy inline, only genuine waits with overlap
+                    info += f" stall={gen.kv.swap_stall_s:.4f}"
+                if variant == "priority_mix":
+                    by_cls = {1: [], 0: []}
+                    for r in reqs:
+                        by_cls[r.priority].append(r.latency)
+                    info += (f" int_p95={percentile(by_cls[1], 95):.3f}"
+                             f" batch_p95={percentile(by_cls[0], 95):.3f}")
             if prefix:
                 info += (f" ttft_tok={gen.prefill_tokens / max(gen.joins, 1):.1f}"
                          f" hit_tok={gen.prefix_hit_tokens}"

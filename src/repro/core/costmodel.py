@@ -355,14 +355,25 @@ class CostModel:
 
     # ---------------------------------------------------------------- swap
     def kv_swap_time(self, pages: int, page_size: int,
-                     kv_format: Optional[str] = None) -> float:
+                     kv_format: Optional[str] = None,
+                     overlap: bool = False,
+                     hidden_s: float = 0.0) -> float:
         """One whole-page KV swap, either direction: ``pages`` pages of
         ``page_size`` tokens across all layers over the measured PCIe
         bandwidth (the simulator's preemption latency model).  Priced
         from the profile's own pool format — the same source the page
         budget uses — so DMA and capacity can never disagree about the
         bytes of a page; ``kv_format`` reprices for a different live
-        format (int8 swaps move ~4x fewer bytes)."""
+        format (int8 swaps move ~4x fewer bytes).
+
+        ``overlap=True`` models swap/decode overlap: the copy rides an
+        async transfer worker while unaffected slots keep decoding, so
+        only the copy time NOT hidden behind ``hidden_s`` of concurrent
+        compute stalls the pipeline (inline mode stalls for the whole
+        copy)."""
         mp = (self.mp if kv_format is None
               else self.mp.with_kv_format(kv_format))
-        return pages * mp.kv_page_bytes(page_size) / self.hw.pcie_bw
+        raw = pages * mp.kv_page_bytes(page_size) / self.hw.pcie_bw
+        if overlap:
+            return max(raw - hidden_s, 0.0)
+        return raw

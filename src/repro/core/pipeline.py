@@ -63,6 +63,12 @@ class StageQueue:
         with self._lock:
             return len(self._dq)
 
+    def snapshot(self) -> List[Any]:
+        """Point-in-time copy of the queued items (nothing popped) —
+        the scheduler peeks priorities without disturbing FIFO order."""
+        with self._lock:
+            return list(self._dq)
+
     def wait(self, timeout: float) -> bool:
         return self._event.wait(timeout)
 

@@ -210,7 +210,8 @@ class PlacementOptimizer:
 
     def market(self, p: Placement, page_size: Optional[int] = None,
                partition_heat: Optional[Sequence[float]] = None,
-               kv_format: Optional[str] = None) -> MarketSplit:
+               kv_format: Optional[str] = None,
+               priority_pressure: float = 0.0) -> MarketSplit:
         """Clear the device-byte market: arbitrate the pool between live
         KV pages, the prefix-cache cap, and device-hot partitions.
 
@@ -236,6 +237,14 @@ class PlacementOptimizer:
         all attention accumulation remain fp32 regardless of the
         storage format, so the market never trades accuracy it cannot
         see.
+
+        ``priority_pressure`` (0..1, the request scheduler's fraction of
+        waiting + in-flight work that is interactive) weights the
+        clearing toward decode throughput: generation time is inflated
+        by ``1 + pressure`` when scoring, so under interactive load the
+        market keeps more KV pages (smaller hot tier) — interactive
+        latency is dominated by decode capacity, not retrieval
+        residency.  At 0 the clearing is unchanged.
         """
         ps = page_size or self.kv_page_size
         mp = (self.cost.mp if kv_format is None
@@ -271,7 +280,8 @@ class PlacementOptimizer:
                 t_ret = self.cost.retrieval_time(
                     p.gen_batch, p.resident_partitions, nprobe=p.nprobe,
                     hot_partitions=n_hot, hot_hit_rate=hit)
-                score = max(t_ret, gen_time(pages))
+                score = max(t_ret, gen_time(pages)
+                            * (1.0 + max(priority_pressure, 0.0)))
                 if best is None or score < best[0] - 1e-12:
                     best = (score, n_hot, pages, hot_bytes, hit)
         _, n_hot, pages, hot_bytes, hit = best

@@ -6,6 +6,7 @@ from repro.serving.generator import (ContinuousGenerator, Generator,
 from repro.serving.kvpool import (HostPagePool, PagedKVCache, PageExhausted,
                                   PagePool)
 from repro.serving.prefixcache import PrefixCache, PrefixCacheStats
+from repro.serving.reqsched import RequestScheduler
 from repro.serving.simulator import (ServingSimulator, SimConfig,
                                      poisson_workload)
 
@@ -14,4 +15,4 @@ __all__ = ["Request", "latency_table", "percentile", "RagdollEngine",
            "poisson_workload", "Generator", "GeneratorConfig",
            "ContinuousGenerator", "SlotTable", "SlotRef", "StaleSlotError",
            "PagePool", "PagedKVCache", "HostPagePool", "PageExhausted",
-           "PrefixCache", "PrefixCacheStats"]
+           "PrefixCache", "PrefixCacheStats", "RequestScheduler"]

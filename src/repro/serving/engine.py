@@ -17,11 +17,17 @@ The generation stage has two disciplines, chosen by the generator type:
   partition cache, the IVF probe width, the partition streamer's
   host-memory budget, and — for paged generators — both tiers of the KV
   page placement (device pool from ``kv_page_budget``, host swap pool
-  from ``kv_host_page_budget``) from the live placement.  Admission is
-  swap-aware: when a join would backpressure on pages (or slots) while
-  a lower-priority slot is live, the pump preempts the victim
-  (swap-to-host, vLLM-style) instead of stalling, and swaps parked
-  requests back in FIFO once the join backlog clears.
+  from ``kv_host_page_budget``) from the live placement.  Admission,
+  preemption and resume are owned by a
+  :class:`~repro.serving.reqsched.RequestScheduler`: when a join would
+  backpressure on pages (or slots) while a lower-priority slot is live,
+  the pump preempts the victim (swap-to-host, vLLM-style) instead of
+  stalling, and swaps parked requests back in once the join backlog
+  clears.  ``Request.priority`` classes order admission, victim
+  selection and resume (with aging so batch work cannot starve);
+  ``partial_swap=True`` sheds only the pages a blocked join needs; a
+  generator built with ``overlap_swap=True`` runs the swap DMA async,
+  fenced by the scheduler at every policy boundary.
 
 With ``retrieval_shards > 1`` the retrieval stage runs through a
 :class:`~repro.retrieval.distributed.ShardedIVFStore`: the IVF
@@ -54,6 +60,7 @@ from repro.retrieval.embedding import HashEmbedder
 from repro.retrieval.streamer import PartitionStreamer
 from repro.retrieval.vectorstore import SearchStats, VectorStore
 from repro.serving.generator import ContinuousGenerator, Generator
+from repro.serving.reqsched import RequestScheduler
 from repro.serving.request import Request
 
 
@@ -86,6 +93,8 @@ class RagdollEngine:
                  streamer: Optional[PartitionStreamer] = None,
                  policy_every: int = 8,
                  retrieval_shards: int = 1,
+                 aging_s: float = 30.0,
+                 partial_swap: bool = False,
                  tracer=None, registry=None):
         self.store = store
         self.embedder = embedder
@@ -136,6 +145,8 @@ class RagdollEngine:
         self.retrieval_stats = SearchStats()   # cumulative, for reporting
         self.completed: List[Request] = []
         self._done_lock = threading.Lock()
+        # completion wakeup: ``drain`` waits on this instead of polling
+        self._done_cv = threading.Condition(self._done_lock)
         # open async "request" spans (submit -> harvest), keyed by rid
         self._req_spans: Dict[int, object] = {}
         if self.continuous:
@@ -144,17 +155,23 @@ class RagdollEngine:
             rw = PipelineWorker("retrieval", rq, cq, self._retrieve_batch,
                                 ret_scheduler,
                                 on_batch_boundary=self._ret_boundary)
+            # the request scheduler owns admission / preemption / resume
+            # (priority classes, partial-slot swap, swap/decode overlap
+            # fencing); the pump wires its capacity + admit hooks
+            self.scheduler: Optional[RequestScheduler] = RequestScheduler(
+                generator, cq, aging_s=aging_s, partial_swap=partial_swap,
+                tracer=self.tracer, registry=self.registry)
             gw = StepPumpWorker(
                 "generation", cq, dq,
-                # paged generators also gate admission on free KV pages,
-                # counting joins a swap-out preemption could make room for
-                capacity_fn=self._gen_capacity,
-                admit_fn=self._admit_requests, step_fn=self._generate_step,
+                capacity_fn=self.scheduler.capacity,
+                admit_fn=self.scheduler.admit,
+                step_fn=self._generate_step,
                 on_policy_boundary=self._gen_boundary,
                 policy_every=policy_every)
             self.pipeline = Pipeline(retrieval_queue=rq, context_queue=cq,
                                      done_queue=dq, workers=[rw, gw])
         else:
+            self.scheduler = None
             self.pipeline = build_pipeline(
                 self._retrieve_batch, self._generate_batch,
                 ret_scheduler, gen_scheduler,
@@ -220,88 +237,20 @@ class RagdollEngine:
             r.output = o
             r.t_gen_start, r.t_gen_end = t0, t1
         self._harvest_obs(reqs)
-        with self._done_lock:
+        with self._done_cv:
             self.completed.extend(reqs)
+            self._done_cv.notify_all()
         return reqs
 
     # --------------------------------------- continuous generation stage
-    def _gen_capacity(self) -> int:
-        """Joins the pump may pop right now.
-
-        ``admit_capacity`` counts guaranteed admits (free slots AND
-        pages); on a paged generator with host swap room we additionally
-        report one speculative join whenever a preemptible victim
-        exists, so a page-starved (or slot-starved) backlog triggers the
-        swap path instead of waiting for a natural leave.
-        """
-        cap = self.generator.admit_capacity
-        gen = self.generator
-        if (cap == 0 and getattr(gen, "paged", False)
-                and self._swap_victim_fits()):
-            return 1
-        return cap
-
-    def _swap_victim_fits(self) -> bool:
-        gen = self.generator
-        victim = gen.swap_victim()
-        return (victim is not None
-                and gen.kv.can_swap_out(victim.index))
-
-    def _preempt_for_join(self) -> bool:
-        """Swap-aware backpressure relief: park the lowest-priority live
-        slot (longest remaining budget) so a blocked join can take its
-        pages — and its slot.  Returns True when a victim was swapped
-        out; False falls back to pure backpressure (requeue)."""
-        gen = self.generator
-        if not getattr(gen, "paged", False):
-            return False
-        victim = gen.swap_victim()
-        if victim is None:
-            return False
-        return gen.preempt(victim) is not None
-
-    def _resume_parked(self) -> None:
-        """Swap parked requests back in once the join backlog is clear
-        (FIFO over preemption order) — resumed slots decode again the
-        very next step.  Backlogged joins strictly precede resumes so
-        swap never thrashes against admission."""
-        gen = self.generator
-        if (not getattr(gen, "parked_slots", 0)
-                or len(self.pipeline.context_queue)):
-            return
-        for key in gen.parked_keys():
-            if gen.resume(key) is None:
-                break                   # slots/pages exhausted: retry later
-
-    def _admit_requests(self, reqs: List[Request]) -> None:
-        """Prefill arrivals into free KV slots (join at any decode step).
-
-        ``admit_capacity`` guarantees those joins succeed on the single
-        pump thread.  A ``None`` join means the pump popped on the
-        speculative swap capacity (or capacity changed asynchronously):
-        preempt victims until the join fits, and only if no victim can
-        be swapped out return the tail to the FRONT of the context queue
-        so admission stays FIFO under backpressure.
-        """
-        t = time.perf_counter()
-        for i, r in enumerate(reqs):
-            # scope the join so the generator maps the slot to this rid
-            # and the prefill span lands on the request's timeline
-            with self.tracer.scope(r.rid):
-                ref = self.generator.join(r, r.prompt, r.max_new_tokens)
-                while ref is None and self._preempt_for_join():
-                    ref = self.generator.join(r, r.prompt,
-                                              r.max_new_tokens)
-            if ref is None:
-                self.pipeline.context_queue.requeue(reqs[i:])
-                return
-            r.t_gen_start = t
-
+    # (admission / preemption / resume policy lives in
+    #  repro.serving.reqsched.RequestScheduler — the pump's capacity_fn
+    #  and admit_fn are wired straight to it in __init__)
     def _generate_step(self) -> Optional[List[Request]]:
         """One decode step over the slot table; returns rows that left."""
         t0 = time.perf_counter()
-        if getattr(self.generator, "paged", False):
-            self._resume_parked()
+        if self.scheduler is not None:
+            self.scheduler.tick()       # resume parked work if room
         stepped = self.generator.step()
         finished = self.generator.harvest()
         if not stepped and not finished:
@@ -321,9 +270,12 @@ class RagdollEngine:
             req.t_gen_end = t
             done.append(req)
         if done:
+            if self.scheduler is not None:
+                self.scheduler.note_done(done)
             self._harvest_obs(done)
-            with self._done_lock:
+            with self._done_cv:
                 self.completed.extend(done)
+                self._done_cv.notify_all()
         return done
 
     # ---------------------------------------------- lazy reconfiguration
@@ -358,26 +310,16 @@ class RagdollEngine:
             page_size=self.generator.page_size if paged else None,
             partition_heat=stats.heat(),
             kv_format=getattr(self.generator, "kv_format", None)
-            if paged else None)
-        if self.continuous:
-            # dynamic capacity: grow/shrink the slot table with the live
-            # placement's gen_batch; paged generators also retarget their
-            # KV page budget from the market's clearing (retarget clamps
-            # it to the block-table-addressable range)
-            pages = host_pages = prefix_pages = None
-            if paged:
-                pages = split.kv_page_budget
-                # the c_cpu KV share funds the swap pool: a placement
-                # that demotes KV to the host grows preemption headroom
-                host_pages = split.host_page_budget
-                # the radix prefix cache's share is a cap *inside* the
-                # pool budget, enforced by LRU demotion to the host tier
-                if getattr(self.generator, "prefix", None) is not None:
-                    prefix_pages = split.prefix_page_budget
-            applied = self.generator.retarget(
-                num_slots=b, page_budget=pages,
-                host_page_budget=host_pages,
-                prefix_page_budget=prefix_pages)
+            if paged else None,
+            # priority-weighted clearing: interactive pressure raises
+            # the value of decode throughput relative to retrieval
+            priority_pressure=(self.scheduler.priority_pressure()
+                               if self.scheduler is not None else 0.0))
+        if self.scheduler is not None:
+            # the scheduler applies the clearing: it fences outstanding
+            # swap DMA (token identity), then retargets the slot table
+            # and — for paged generators — both KV tiers + the prefix cap
+            applied = self.scheduler.apply_split(b, split)
         else:
             applied = {}
         # hot tier retarget under the market's byte grant: promote down
@@ -490,11 +432,11 @@ class RagdollEngine:
         Returns the number of requests completed so far.
         """
         assert self.continuous, "pump_once requires a continuous generator"
-        free = self._gen_capacity()
+        free = self.scheduler.capacity()
         items = self.pipeline.context_queue.pop_batch(free) if free > 0 \
             else []
         if items:
-            self._admit_requests(items)
+            self.scheduler.admit(items)
         self._generate_step()
         with self._done_lock:
             return len(self.completed)
@@ -517,16 +459,30 @@ class RagdollEngine:
             # and generation threads, keyed by rid in the trace viewer
             self._req_spans[req.rid] = self.tracer.begin(
                 "request", rid=req.rid, trace_ids=[req.rid])
+        if self.scheduler is not None:
+            self.scheduler.note_queued(req)
         self.pipeline.retrieval_queue.put(req)
 
     def drain(self, n: int, timeout: float = 120.0) -> List[Request]:
-        t0 = time.time()
-        while time.time() - t0 < timeout:
-            with self._done_lock:
-                if len(self.completed) >= n:
-                    return list(self.completed)
-            time.sleep(0.01)
-        with self._done_lock:
+        """Block until ``n`` requests have completed (condition-variable
+        wakeup, no polling).  Raises :class:`TimeoutError` — naming the
+        in-flight rids and the scheduler's state snapshot — instead of
+        silently returning fewer than ``n``."""
+        deadline = time.monotonic() + timeout
+        with self._done_cv:
+            while len(self.completed) < n:
+                left = deadline - time.monotonic()
+                if left <= 0 or not self._done_cv.wait(timeout=left):
+                    if len(self.completed) >= n:
+                        break
+                    stuck = (self.scheduler.in_flight_rids()
+                             if self.scheduler is not None else [])
+                    snap = (self.scheduler.snapshot()
+                            if self.scheduler is not None else {})
+                    raise TimeoutError(
+                        f"drain({n}) timed out after {timeout:.1f}s with "
+                        f"{len(self.completed)}/{n} completed; in-flight "
+                        f"rids={stuck}; scheduler={snap}")
             return list(self.completed)
 
 
@@ -542,6 +498,9 @@ class SerialRAGEngine:
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         self._lock = threading.Lock()
+        # one condition doubles as the submit wakeup (worker waits for
+        # arrivals) and the completion wakeup (drain waits for results)
+        self._cv = threading.Condition(self._lock)
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True)
 
@@ -550,19 +509,23 @@ class SerialRAGEngine:
 
     def stop(self) -> None:
         self._stop.set()
+        with self._cv:
+            self._cv.notify_all()       # wake the worker so it can exit
         self._thread.join(timeout=5.0)
 
     def submit(self, req: Request) -> None:
-        with self._lock:
+        with self._cv:
             self.queue.append(req)
+            self._cv.notify_all()
 
     def _run(self) -> None:
         while not self._stop.is_set():
-            with self._lock:
+            with self._cv:
+                while not self.queue and not self._stop.is_set():
+                    self._cv.wait()     # stop() notifies under the cv
                 batch = self.queue[:self.batch_size]
                 self.queue = self.queue[len(batch):]
             if not batch:
-                time.sleep(0.005)
                 continue
             t0 = time.perf_counter()
             queries = self.embedder.embed([r.query for r in batch])
@@ -578,15 +541,24 @@ class SerialRAGEngine:
             for r, o in zip(batch, outs):
                 r.output = o
                 r.t_gen_start, r.t_gen_end = t1, t2
-            with self._lock:
+            with self._cv:
                 self.completed.extend(batch)
+                self._cv.notify_all()
 
     def drain(self, n: int, timeout: float = 120.0) -> List[Request]:
-        t0 = time.time()
-        while time.time() - t0 < timeout:
-            with self._lock:
-                if len(self.completed) >= n:
-                    return list(self.completed)
-            time.sleep(0.01)
-        with self._lock:
+        """Block until ``n`` requests have completed.  Raises
+        :class:`TimeoutError` naming the still-queued rids instead of
+        silently returning fewer than ``n``."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while len(self.completed) < n:
+                left = deadline - time.monotonic()
+                if left <= 0 or not self._cv.wait(timeout=left):
+                    if len(self.completed) >= n:
+                        break
+                    queued = [r.rid for r in self.queue]
+                    raise TimeoutError(
+                        f"drain({n}) timed out after {timeout:.1f}s with "
+                        f"{len(self.completed)}/{n} completed; queued "
+                        f"rids={queued}")
             return list(self.completed)

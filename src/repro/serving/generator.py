@@ -364,6 +364,14 @@ class ContinuousGenerator(_GeneratorBase):
     token-identical to uninterrupted generation (``tests/test_swap.py``)
     because whole-page host round-trips are bitwise exact and the
     gather backend reads through the table, never page identity.
+    ``preempt(ref, pages=k)`` is the *partial* variant — only the
+    slot's ``k`` coldest pages move host-side, the hot tail stays
+    device-resident, and resume reloads just the shed prefix — and
+    ``overlap_swap=True`` moves the swap DMA onto an async transfer
+    worker so decode for unaffected slots proceeds while copies are
+    outstanding (``fence`` is the policy-boundary barrier; slots with
+    an in-flight swap-in are excluded from decode until their copy
+    lands, which preserves token identity).
 
     Both layouts are token-identical to the whole-batch ``Generator``
     (see ``tests/test_continuous.py`` / ``tests/test_paged.py``).
@@ -379,6 +387,7 @@ class ContinuousGenerator(_GeneratorBase):
                  prefix_cache: bool = False,
                  prefix_page_budget: Optional[int] = None,
                  kv_format: Optional[str] = None,
+                 overlap_swap: bool = False,
                  tracer=None, registry=None):
         super().__init__(cfg, params, gen_cfg, streamed=streamed,
                          policy=policy)
@@ -409,16 +418,26 @@ class ContinuousGenerator(_GeneratorBase):
         self.cow_copies = 0
         self._prefilling: Dict[int, _ChunkJob] = {}
         self._parked: Dict[Any, _Parked] = {}
+        # slots whose async H2D swap-in is outstanding: leased, but
+        # excluded from decode until ``poll`` applies the landed copy
+        self._pending_resume: set = set()
         self.swap_outs = 0
         self.swap_ins = 0
         self.peak_in_flight = 0
         if kv_format is not None and not paged:
             raise ValueError("kv_format requires paged=True")
+        if overlap_swap and not paged:
+            raise ValueError("overlap_swap requires paged=True")
+        if overlap_swap and prefix_cache:
+            # the prefix cache touches the host mirror inline
+            # (demote/revive) — racy against the transfer worker
+            raise ValueError("overlap_swap is incompatible with "
+                             "prefix_cache")
         if paged:
             self.kv: Optional[PagedKVCache] = PagedKVCache(
                 cfg, num_slots, total, page_size, num_pages=page_budget,
                 dtype=gen_cfg.dtype, host_pages=host_page_budget,
-                kv_format=kv_format,
+                kv_format=kv_format, overlap=overlap_swap,
                 tracer=self.tracer, registry=self.registry)
             if streamed:
                 self.caches = self.kv.init_layered(self.exec.layer_kinds())
@@ -824,11 +843,21 @@ class ContinuousGenerator(_GeneratorBase):
         Returns the number of slots that made progress (0 = idle).
         """
         progressed = 0
+        if self.paged and self.kv.overlap:
+            progressed += self._poll_swaps()
         if self._prefilling:
             progressed += self._advance_prefills()
         refs = [r for r in self.table.active_refs()
-                if r.index not in self._prefilling]
+                if r.index not in self._prefilling
+                and r.index not in self._pending_resume]
         if not refs:
+            if (not progressed and self.paged and self.kv.overlap
+                    and self.kv.outstanding):
+                # nothing can decode until a DMA lands: block briefly
+                # on the head job (stall-counted) so the pump keeps
+                # pumping instead of idling with work in flight
+                self.kv.wait_any(0.05)
+                progressed += self._poll_swaps()
             if progressed:
                 self.steps += 1
             return progressed
@@ -851,6 +880,8 @@ class ContinuousGenerator(_GeneratorBase):
             if self.streamed:
                 mask = self.table.mask()
                 for slot in self._prefilling:   # still prefilling != live
+                    mask[slot] = False
+                for slot in self._pending_resume:   # awaiting async H2D
                     mask[slot] = False
                 mask = jnp.asarray(mask)
                 if self.paged:
@@ -899,22 +930,37 @@ class ContinuousGenerator(_GeneratorBase):
     def swap_victim(self) -> Optional[SlotRef]:
         """Preemption policy: the live slot with the most remaining
         budget — the last to finish, i.e. the lowest-priority work —
-        excluding slots still chunk-prefilling.  Ties break to the
-        lowest slot index (deterministic)."""
+        excluding slots still chunk-prefilling or awaiting an async
+        swap-in.  Ties break to the lowest slot index (deterministic).
+
+        The priority-aware generalization lives in
+        ``RequestScheduler.select_victim`` (lowest priority class
+        first, then longest remaining budget); this single-class policy
+        is kept as its default-knob equivalent.
+        """
         best, best_rem = None, -1
         for ref in self.table.active_refs():
-            if ref.index in self._prefilling:
+            if (ref.index in self._prefilling
+                    or ref.index in self._pending_resume):
                 continue
             rem = self.table.state(ref).remaining
             if rem > best_rem:
                 best, best_rem = ref, rem
         return best
 
-    def preempt(self, ref: SlotRef) -> Optional[Any]:
+    def preempt(self, ref: SlotRef,
+                pages: Optional[int] = None) -> Optional[Any]:
         """Park a live slot: swap its KV pages to the host pool and end
         its lease.  Returns the resume handle (the request key), or
         ``None`` when the host pool cannot hold the slot's pages (or the
-        slot is still chunk-prefilling) — the slot stays live.
+        slot is still chunk-prefilling / mid-swap) — the slot stays
+        live.
+
+        ``pages=k`` is a *partial* park: only the slot's ``k`` coldest
+        pages move to the host, the hot tail stays device-resident
+        under the handle (the lease still ends — a slot missing its
+        prefix cannot decode), and ``resume`` reloads just the shed
+        prefix.
 
         The release bumps the slot's epoch, so any SlotRef retained
         from before the preemption raises :class:`StaleSlotError`
@@ -923,7 +969,8 @@ class ContinuousGenerator(_GeneratorBase):
         """
         assert self.paged, "preempt requires paged=True"
         st = self.table.state(ref)              # validates the lease
-        if ref.index in self._prefilling:
+        if (ref.index in self._prefilling
+                or ref.index in self._pending_resume):
             return None
         handle = _park_handle(st.key)
         pools = self.caches if self.streamed else self.cache
@@ -932,7 +979,8 @@ class ContinuousGenerator(_GeneratorBase):
                                  trace_ids=list(scope))
                 if self.tracer.enabled else NULL_SPAN)
         with span:
-            if not self.kv.swap_out(pools, ref.index, handle):
+            if not self.kv.swap_out(pools, ref.index, handle,
+                                    pages=pages):
                 return None                      # host pool exhausted
             st = self.table.release(ref)
         self._slot_scope.pop(ref.index, None)
@@ -971,6 +1019,11 @@ class ContinuousGenerator(_GeneratorBase):
             self.caches = new_pools
         else:
             self.cache = new_pools
+        if self.kv.overlap:
+            # the H2D is in flight: the slot is leased but its block-
+            # table row stays all-trash (interim decode writes park
+            # harmlessly) and decode excludes it until poll applies it
+            self._pending_resume.add(ref.index)
         if self.tracer.enabled and parked.trace_ids:
             self._slot_scope[ref.index] = parked.trace_ids
         self.table.state(ref).tokens.extend(parked.tokens)
@@ -979,6 +1032,31 @@ class ContinuousGenerator(_GeneratorBase):
         del self._parked[key]
         self.swap_ins += 1
         return ref
+
+    # ------------------------------------------- async swap/decode overlap
+    def _poll_swaps(self) -> int:
+        """Apply landed async swap DMA (overlap mode); returns the
+        number of jobs applied (counts as step progress so the pump
+        keeps pumping while transfers drain)."""
+        pools, resumed, applied = self.kv.poll(self._pools())
+        if applied:
+            self._set_pools(pools)
+            for slot in resumed:
+                self._pending_resume.discard(slot)
+        return applied
+
+    def fence(self) -> None:
+        """Barrier: wait for every outstanding swap DMA and apply it —
+        called at the policy boundary (before budgets retarget) so
+        token identity is guaranteed across overlap schedules.  No-op
+        for inline-DMA generators."""
+        if self.kv is None or not self.kv.overlap:
+            return
+        pools, resumed, applied = self.kv.fence(self._pools())
+        if applied:
+            self._set_pools(pools)
+            for slot in resumed:
+                self._pending_resume.discard(slot)
 
     # -------------------------------------------------- dynamic capacity
     def resize(self, num_slots: int) -> int:
@@ -1047,6 +1125,7 @@ class ContinuousGenerator(_GeneratorBase):
         — enforced immediately by LRU demotion to the host tier.
         """
         out: Dict[str, int] = {}
+        self.fence()   # settle outstanding swap DMA before resizing
         if num_slots is not None:
             out["slots"] = self.resize(num_slots)
         if page_budget is not None and self.paged:

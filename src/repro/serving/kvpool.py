@@ -79,6 +79,10 @@ bounded by device + host pages rather than device pages alone.
 """
 from __future__ import annotations
 
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -124,6 +128,10 @@ class PagePool:
         # page id -> reference count.  An allocated page starts at 1
         # (its table entry / standalone hold); free pages have no entry.
         self._refs: Dict[int, int] = {}
+        # pages freed into an outstanding async D2H DMA: unreferenced
+        # but NOT allocatable until ``complete_inflight`` lands them
+        # (free / leased / shared / parked / in-flight / trash states)
+        self._inflight: set = set()
 
     # ------------------------------------------------------------ queries
     @property
@@ -149,8 +157,17 @@ class PagePool:
 
     @property
     def referenced_pages(self) -> int:
-        """Distinct pages with refcount >= 1 (free + referenced = capacity)."""
+        """Distinct pages with refcount >= 1 (free + referenced +
+        in-flight = capacity)."""
         return len(self._refs)
+
+    @property
+    def inflight_pages(self) -> int:
+        """Pages pinned by an outstanding async swap DMA."""
+        return len(self._inflight)
+
+    def is_inflight(self, page: int) -> bool:
+        return page in self._inflight
 
     def refcount(self, page: int) -> int:
         """Live references to ``page`` (0 = free / never allocated)."""
@@ -248,14 +265,30 @@ class PagePool:
             raise ValueError(f"page {page} is not allocated")
         self._refs[page] += 1
 
-    def decref(self, page: int) -> None:
-        """Drop one reference; the page frees when the count hits zero."""
+    def decref(self, page: int, inflight: bool = False) -> None:
+        """Drop one reference; the page frees when the count hits zero.
+
+        With ``inflight=True`` a count-zero page enters the in-flight
+        set instead of the free list: it cannot be re-leased until the
+        async D2H reading it completes (:meth:`complete_inflight`).
+        """
         rc = self._refs[page] - 1         # KeyError = double free
         if rc <= 0:
             del self._refs[page]
-            self._free.append(page)
+            if inflight:
+                self._inflight.add(page)
+            else:
+                self._free.append(page)
         else:
             self._refs[page] = rc
+
+    def complete_inflight(self, pages: Sequence[int]) -> None:
+        """Land an async D2H: the pinned pages return to the free list."""
+        for p in pages:
+            if p not in self._inflight:
+                raise ValueError(f"page {p} is not in flight")
+            self._inflight.remove(p)
+            self._free.append(p)
 
     def grab(self, n: int = 1) -> Optional[List[int]]:
         """Allocate ``n`` standalone pages (refcount 1, no table) from
@@ -299,8 +332,64 @@ class PagePool:
         return src, dst
 
     # --------------------------------------------------------------- swap
+    def park(self, key: Any, handle: Any, blocks: Optional[int] = None,
+             inflight: bool = False) -> Tuple[List[int], int]:
+        """End ``key``'s device residency for a (possibly partial) swap.
+
+        The first ``blocks`` table entries — the sequence's *coldest*,
+        oldest-position pages (FlexGen-style) — lose this slot's
+        reference and are returned as ``(cold_pages, reservation)`` in
+        logical order so the caller can DMA them out before re-issue.
+        Any hotter tail pages stay device-resident, re-keyed under
+        ``handle`` (still refcounted, still counted in ``used_pages``)
+        until :meth:`unpark` splices them back behind the reloaded
+        prefix.  ``blocks=None`` sheds the whole table (a full swap).
+        With ``inflight=True`` count-zero freed pages enter the
+        in-flight set instead of the free list — unallocatable until
+        the async D2H completes (:meth:`complete_inflight`).
+        """
+        tab = self._tables.pop(key)       # KeyError = not a holder
+        res = self._reserved.pop(key, 0)
+        k = len(tab) if blocks is None else blocks
+        if not 0 <= k <= len(tab):
+            self._tables[key] = tab       # restore before raising
+            self._reserved[key] = res
+            raise ValueError(f"cannot shed {k} of {len(tab)} pages "
+                             f"for {key!r}")
+        cold, tail = tab[:k], tab[k:]
+        for p in reversed(cold):
+            self.decref(p, inflight=inflight)
+        if tail:
+            self._tables[handle] = tail
+        return list(cold), res
+
+    def unpark(self, handle: Any, key: Any, blocks: int,
+               reserve: int = 0) -> Optional[List[int]]:
+        """Re-lease ``blocks`` fresh pages (+ re-book ``reserve``) for a
+        resuming slot, splicing any device-resident tail retained under
+        ``handle`` behind them.  Returns the fresh prefix page ids, or
+        ``None`` when the pool cannot cover ``blocks + reserve`` right
+        now (the slot stays parked, its retained tail untouched)."""
+        if blocks < 0 or reserve < 0:
+            raise ValueError("blocks/reserve must be >= 0")
+        tail = self._tables.pop(handle, [])
+        if key in self._tables:
+            if tail:
+                self._tables[handle] = tail
+            raise ValueError(f"slot {key!r} already holds pages")
+        if blocks + reserve > self.available_pages:
+            if tail:
+                self._tables[handle] = tail
+            return None
+        new = [self._free.pop() for _ in range(blocks)]
+        for p in new:
+            self._refs[p] = 1
+        self._tables[key] = new + tail
+        self._reserved[key] = reserve
+        return new
+
     def swap_out(self, key: Any) -> Tuple[List[int], int]:
-        """End ``key``'s device residency for a host swap.
+        """End ``key``'s device residency for a full host swap.
 
         Returns ``(pages, reservation)``: the page ids in logical order
         (so the caller can DMA them out before they are re-issued) and
@@ -309,12 +398,9 @@ class PagePool:
         swapped-out data's integrity lives host-side from here on.
         Shared pages (a mapped cached prefix) merely lose this slot's
         reference; the cache and other holders keep reading them.
+        ``park`` is the partial/async-aware generalization.
         """
-        tab = self._tables.pop(key)       # KeyError = not a holder
-        res = self._reserved.pop(key, 0)
-        for p in reversed(tab):
-            self.decref(p)
-        return list(tab), res
+        return self.park(key, key)
 
     def swap_in(self, key: Any, blocks: int,
                 reserve: int = 0) -> Optional[List[int]]:
@@ -325,20 +411,10 @@ class PagePool:
         returned — correctness must come from the caller's remapped
         block table, never from page identity.  Returns ``None`` when
         the pool cannot cover ``blocks + reserve`` right now (the slot
-        stays parked host-side).
+        stays parked host-side).  ``unpark`` is the partial-residency
+        generalization.
         """
-        if key in self._tables:
-            raise ValueError(f"slot {key!r} already holds pages")
-        if blocks < 0 or reserve < 0:
-            raise ValueError("blocks/reserve must be >= 0")
-        if blocks + reserve > self.available_pages:
-            return None
-        new = [self._free.pop() for _ in range(blocks)]
-        for p in new:
-            self._refs[p] = 1
-        self._tables[key] = new
-        self._reserved[key] = reserve
-        return new
+        return self.unpark(key, key, blocks, reserve)
 
     # ------------------------------------------------------------- resize
     def resize(self, target: int) -> int:
@@ -353,7 +429,8 @@ class PagePool:
             self._free.extend(range(self._capacity + 1, target + 1))
             self._capacity = target
             return self._capacity
-        in_use_max = max(self._refs, default=0)   # tables + cache holds
+        in_use_max = max(max(self._refs, default=0),   # tables + holds
+                         max(self._inflight, default=0))  # pending DMA
         floor = max(target, in_use_max)
         budget = self.free_pages - self.reserved_pages
         free_set = set(self._free)
@@ -549,6 +626,24 @@ class HostPagePool:
             else:
                 host[hp] = np.asarray(dev[dp])
 
+    def write_pages(self, hp: np.ndarray, rows: Sequence[Any]) -> None:
+        """Commit already-gathered device page rows into host pages
+        ``hp`` — the async transfer worker's half of :meth:`store` (the
+        submit thread snapshots the gathers and the host page ids, so
+        the worker never reads mutable bookkeeping)."""
+        for (arr, axis), row in zip(self._mirror, rows):
+            if axis == 1:
+                arr[:, hp] = np.asarray(row)
+            else:
+                arr[hp] = np.asarray(row)
+
+    def read_pages(self, hp: np.ndarray) -> List[np.ndarray]:
+        """Gather host pages ``hp`` from every mirror leaf — the async
+        worker's half of :meth:`load` (the device scatter happens on
+        the submitting thread at apply time)."""
+        return [np.ascontiguousarray(arr[:, hp] if axis == 1 else arr[hp])
+                for arr, axis in self._mirror]
+
     def load(self, pools, key: Any, dev_pages: Sequence[int]):
         """H2D DMA: copy ``key``'s host pages into ``dev_pages``
         (logical order); returns the updated pools pytree."""
@@ -603,18 +698,49 @@ def resize_cache_rows(pools, rows: int):
     return [jax.tree.map(lambda t: fit(t, 0), c) for c in pools]
 
 
+@dataclass
+class _SwapJob:
+    """One asynchronous swap DMA tracked by the transfer worker.
+
+    ``kind="out"`` (D2H): ``rows`` holds lazy device gathers of the cold
+    pages snapshotted at submit time (JAX's data dependencies keep the
+    gathered values alive across jit donation), ``flight`` the pool
+    pages pinned in-flight until the copy lands.  ``kind="in"`` (H2D):
+    the worker fills ``rows`` from the host mirror; the submitting
+    thread scatters them device-side at apply time (``poll``).
+    """
+    kind: str                 # "out" (D2H) | "in" (H2D)
+    handle: Any               # host-pool holder key
+    slot: int                 # generator slot index
+    pages: List[int]          # device page ids (in-flight / fresh lease)
+    hp: np.ndarray            # host page ids, snapshotted at submit
+    rows: Optional[List[Any]] = None
+    flight: List[int] = field(default_factory=list)
+    done: threading.Event = field(default_factory=threading.Event)
+    error: Optional[BaseException] = None
+
+
 class PagedKVCache:
     """Pooled KV arrays + shared block table for one generator.
 
     The pool *arrays* live in the caller's cache pytree (so jit donation
     keeps working); this object owns the bookkeeping (:class:`PagePool`),
     the host block table, and its lazily refreshed device mirror.
+
+    With ``overlap=True`` swap DMA runs on a dedicated transfer worker
+    (an async FIFO queue) instead of inline: ``swap_out``/``swap_in``
+    submit jobs and return immediately, decode for unaffected slots
+    proceeds while the copies are outstanding, and ``poll``/``fence``
+    apply completed jobs on the submitting thread.  ``swap_stall_s``
+    accumulates the wall-clock the caller actually *blocked* on swap
+    DMA — the whole copy in inline mode, only genuine waits in overlap
+    mode — the fig8 ``swap_overlap`` row's headline number.
     """
 
     def __init__(self, cfg: ModelConfig, num_slots: int, total_len: int,
                  page_size: int, num_pages: Optional[int] = None,
                  dtype=jnp.float32, host_pages: Optional[int] = None,
-                 kv_format: Optional[str] = None,
+                 kv_format: Optional[str] = None, overlap: bool = False,
                  tracer=None, registry=None):
         _attn_only_kinds(cfg)
         self.cfg = cfg
@@ -648,6 +774,15 @@ class PagedKVCache:
         # benchmarks even with a NULL registry)
         self.swap_out_bytes = 0
         self.swap_in_bytes = 0
+        # async swap/decode overlap: a dedicated transfer worker drains
+        # a FIFO job queue (FIFO guarantees a handle's D2H lands before
+        # any H2D reads its host pages); jobs apply on the submitting
+        # thread via ``poll``/``fence``
+        self.overlap = overlap
+        self._jobs: List[_SwapJob] = []
+        self._job_q: "queue.Queue[Optional[_SwapJob]]" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self.swap_stall_s = 0.0   # wall-clock actually blocked on swap DMA
 
     def page_nbytes(self, pools) -> int:
         """Physical bytes one page occupies across every pool leaf
@@ -768,58 +903,237 @@ class PagedKVCache:
         return pools, True
 
     # ------------------------------------------------------ swap-to-host
-    def can_swap_out(self, slot: int) -> bool:
-        """The host pool can hold ``slot``'s pages right now."""
-        return self.host.can_hold(len(self.pool.table(slot)))
+    @staticmethod
+    def _tail_key(handle: Any) -> Tuple[str, Any]:
+        """Device-pool key for a partial park's retained hot tail.
 
-    def swap_out(self, pools, slot: int, handle: Any) -> bool:
+        Namespaced so a hashable request key (often a small int) can
+        never collide with a live slot index in ``PagePool._tables``.
+        """
+        return ("kv.tail", handle)
+
+    def can_swap_out(self, slot: int, pages: Optional[int] = None) -> bool:
+        """The host pool can hold ``slot``'s pages (or the first
+        ``pages`` of them) right now."""
+        need = len(self.pool.table(slot)) if pages is None else pages
+        return self.host.can_hold(need)
+
+    def swap_out(self, pools, slot: int, handle: Any,
+                 pages: Optional[int] = None) -> bool:
         """Preempt ``slot``: DMA its pages D2H under ``handle``, free its
         device pages + reservation, point its block-table row at the
         trash page (parked decode writes can never corrupt re-issued
         pages).  ``False`` when the host pool lacks room — the slot
         stays live and untouched.
+
+        ``pages=k`` sheds only the slot's ``k`` coldest (oldest-
+        position) pages: the hot tail stays device-resident under
+        ``handle`` and is spliced back behind the reloaded prefix on
+        ``swap_in`` — both DMA directions move only ``k`` pages.  In
+        overlap mode the D2H is submitted to the async transfer worker
+        (the freed pages sit in-flight until it lands); inline mode
+        blocks as before.
         """
         dev = self.pool.table(slot)
-        hp = self.host.acquire(handle, len(dev),
+        k = len(dev) if pages is None else pages
+        if not 0 <= k <= len(dev):
+            raise ValueError(f"cannot swap {k} of {len(dev)} pages "
+                             f"for slot {slot}")
+        cold = dev[:k]
+        hp = self.host.acquire(handle, k,
                                reserve=self.pool.reservation(slot))
         if hp is None:
             return False
-        with self.tracer.span("swap.out", slot=slot, pages=len(dev)):
-            self.host.store(pools, handle, dev)  # D2H before pages recycle
-            self.pool.swap_out(slot)
-            self._tab[slot, :] = TRASH_PAGE
-            self._tab_dev = None
-        nbytes = len(dev) * self.page_nbytes(pools)
+        if self.overlap:
+            self._submit_swap_out(pools, slot, handle, cold, hp)
+        else:
+            t0 = time.perf_counter()
+            with self.tracer.span("swap.out", slot=slot, pages=k):
+                # D2H before the pages recycle
+                self.host.store(pools, handle, cold)
+                self.pool.park(slot, self._tail_key(handle), blocks=k)
+                self._tab[slot, :] = TRASH_PAGE
+                self._tab_dev = None
+            self.swap_stall_s += time.perf_counter() - t0
+        nbytes = k * self.page_nbytes(pools)
         self.swap_out_bytes += nbytes
-        self.registry.counter("kv.swap_out_pages").inc(len(dev))
+        self.registry.counter("kv.swap_out_pages").inc(k)
         self.registry.counter("kv.swap_out_bytes").inc(nbytes)
         return True
 
     def swap_in(self, pools, slot: int, handle: Any):
         """Resume ``handle`` into ``slot``: fresh physical pages (ids
         generally differ from the swapped-out ones), H2D DMA in logical
-        order, block-table row remapped.  Returns the updated pools, or
-        ``None`` when the device pool cannot cover the slot's pages plus
-        its re-booked reservation (the request stays parked host-side).
+        order, block-table row remapped (any device-retained tail from
+        a partial swap splices in behind the reloaded prefix).  Returns
+        the updated pools, or ``None`` when the device pool cannot cover
+        the slot's pages plus its re-booked reservation (the request
+        stays parked host-side).
+
+        In overlap mode the H2D is submitted async: the slot's
+        block-table row stays all-trash (so interim decode writes park
+        harmlessly) until ``poll`` applies the landed copy and reports
+        the slot resumed.
         """
         blocks = len(self.host.pages(handle))
-        new = self.pool.swap_in(slot, blocks, self.host.reservation(handle))
+        new = self.pool.unpark(self._tail_key(handle), slot, blocks,
+                               self.host.reservation(handle))
         if new is None:
             return None
-        with self.tracer.span("swap.in", slot=slot, pages=blocks):
-            pools = self.host.load(pools, handle, new)
-            self.host.release(handle)
-            self._tab[slot, :] = TRASH_PAGE
-            self._tab[slot, :blocks] = new
-            self._tab_dev = None
+        if self.overlap:
+            self._submit_swap_in(pools, slot, handle, new)
+        else:
+            t0 = time.perf_counter()
+            with self.tracer.span("swap.in", slot=slot, pages=blocks):
+                pools = self.host.load(pools, handle, new)
+                self.host.release(handle)
+                tab = self.pool.table(slot)
+                self._tab[slot, :] = TRASH_PAGE
+                self._tab[slot, :len(tab)] = tab
+                self._tab_dev = None
+            self.swap_stall_s += time.perf_counter() - t0
         nbytes = blocks * self.page_nbytes(pools)
         self.swap_in_bytes += nbytes
         self.registry.counter("kv.swap_in_pages").inc(blocks)
         self.registry.counter("kv.swap_in_bytes").inc(nbytes)
         return pools
 
+    # ------------------------------------------ async swap/decode overlap
+    def _ensure_worker(self) -> None:
+        if self._worker is None:
+            self._worker = threading.Thread(
+                target=self._worker_loop, name="kv-swap-dma", daemon=True)
+            self._worker.start()
+
+    def _worker_loop(self) -> None:
+        while True:
+            job = self._job_q.get()
+            if job is None:
+                return
+            try:
+                if job.kind == "out":
+                    # force the device gathers (snapshotted at submit,
+                    # so later writes to recycled pages can't corrupt
+                    # them) and commit them into the host mirror
+                    self.host.write_pages(
+                        job.hp, [np.asarray(r) for r in job.rows])
+                else:
+                    job.rows = self.host.read_pages(job.hp)
+            except BaseException as e:       # surfaced by poll()
+                job.error = e
+            finally:
+                job.done.set()
+
+    def _submit_swap_out(self, pools, slot: int, handle: Any,
+                         cold: List[int], hp: List[int]) -> None:
+        self._ensure_worker()
+        self.host._ensure_mirror(pools)
+        dp = np.asarray(cold, np.int64)
+        # lazy device gathers: data deps keep the gathered values valid
+        # even though the decode jit donates the pool arrays
+        rows = [leaf[:, dp] if axis == 1 else leaf[dp]
+                for leaf, axis in _pool_leaves(pools)]
+        self.pool.park(slot, self._tail_key(handle), blocks=len(cold),
+                       inflight=True)
+        flight = [p for p in cold if self.pool.is_inflight(p)]
+        self._tab[slot, :] = TRASH_PAGE
+        self._tab_dev = None
+        job = _SwapJob(kind="out", handle=handle, slot=slot,
+                       pages=list(cold), hp=np.asarray(hp, np.int64),
+                       rows=rows, flight=flight)
+        self.tracer.instant("swap.async", kind="out", slot=slot,
+                            pages=len(cold))
+        self._jobs.append(job)
+        self._job_q.put(job)
+
+    def _submit_swap_in(self, pools, slot: int, handle: Any,
+                        new: List[int]) -> None:
+        self._ensure_worker()
+        self.host._ensure_mirror(pools)
+        job = _SwapJob(kind="in", handle=handle, slot=slot,
+                       pages=list(new),
+                       hp=np.asarray(self.host.pages(handle), np.int64))
+        self.tracer.instant("swap.async", kind="in", slot=slot,
+                            pages=len(job.hp))
+        self._jobs.append(job)
+        self._job_q.put(job)
+
+    def _apply_swap_in(self, pools, job: _SwapJob):
+        dp = jnp.asarray(np.asarray(job.pages, np.int32))
+        new_leaves = []
+        for (leaf, axis), rows in zip(_pool_leaves(pools), job.rows):
+            r = jnp.asarray(rows)
+            if axis == 1:
+                new_leaves.append(leaf.at[:, dp].set(r.astype(leaf.dtype)))
+            else:
+                new_leaves.append(leaf.at[dp].set(r.astype(leaf.dtype)))
+        pools = _rebuild_pools(pools, new_leaves)
+        self.host.release(job.handle)
+        tab = self.pool.table(job.slot)
+        self._tab[job.slot, :] = TRASH_PAGE
+        self._tab[job.slot, :len(tab)] = tab
+        self._tab_dev = None
+        return pools
+
+    @property
+    def outstanding(self) -> int:
+        """Async swap jobs submitted but not yet applied."""
+        return len(self._jobs)
+
+    def poll(self, pools):
+        """Apply completed async jobs FIFO from the head; returns
+        ``(pools, resumed_slots, applied_count)``.  Never blocks."""
+        resumed: List[int] = []
+        applied = 0
+        while self._jobs and self._jobs[0].done.is_set():
+            job = self._jobs.pop(0)
+            if job.error is not None:
+                raise job.error
+            if job.kind == "out":
+                self.pool.complete_inflight(job.flight)
+            else:
+                pools = self._apply_swap_in(pools, job)
+                resumed.append(job.slot)
+            applied += 1
+        return pools, resumed, applied
+
+    def wait_any(self, timeout: Optional[float] = None) -> bool:
+        """Block (stall-counted) until the head job completes."""
+        if not self._jobs:
+            return False
+        job = self._jobs[0]
+        if not job.done.is_set():
+            t0 = time.perf_counter()
+            job.done.wait(timeout)
+            self.swap_stall_s += time.perf_counter() - t0
+        return job.done.is_set()
+
+    def fence(self, pools):
+        """Barrier: wait for every outstanding swap DMA and apply it —
+        the policy boundary's token-identity guarantee.  Returns
+        ``(pools, resumed_slots, applied_count)`` like ``poll``."""
+        for job in self._jobs:
+            if not job.done.is_set():
+                t0 = time.perf_counter()
+                job.done.wait()
+                self.swap_stall_s += time.perf_counter() - t0
+        return self.poll(pools)
+
+    def close(self) -> None:
+        """Stop the transfer worker (tests; daemon thread otherwise)."""
+        if self._worker is not None:
+            self._job_q.put(None)
+            self._worker.join(timeout=5.0)
+            self._worker = None
+
     def set_host_budget(self, pages: int) -> int:
-        """Retarget the host pool (the placement's ``c_cpu`` KV share)."""
+        """Retarget the host pool (the placement's ``c_cpu`` KV share).
+
+        Callers must ``fence`` first in overlap mode: the resize
+        replaces the host mirror arrays the transfer worker reads."""
+        if self._jobs:
+            raise RuntimeError("fence outstanding swap DMA before "
+                               "resizing the host pool")
         return self.host.resize(pages)
 
     # ------------------------------------------------------------ scatter

@@ -1,0 +1,341 @@
+"""Unified request scheduler: the generation-side admission policy.
+
+Everything that used to live in ``RagdollEngine``'s private methods
+(``_gen_capacity`` / ``_preempt_for_join`` / ``_resume_parked`` /
+``_admit_requests`` and the retarget half of ``_gen_boundary``) now
+lives here, behind one object that owns the request lifecycle::
+
+    queued -> admitted -> running -> parked(full|partial) -> done
+                 ^                        |
+                 +------- resume ---------+
+
+On top of that seam the scheduler adds the three swap follow-ons the
+ROADMAP has carried since PR 4:
+
+**Priority classes.**  ``Request.priority`` (1 = interactive outranks
+0 = batch) drives admission order, swap-victim selection (lowest
+priority class first, then longest remaining budget — replacing
+``ContinuousGenerator.swap_victim``'s single policy) and resume order.
+An **aging rule** keeps batch requests from starving: a request's
+effective priority is ``priority + waited / aging_s``, so a batch
+request that has waited ``aging_s`` seconds ranks with a fresh
+interactive one.  A joiner may only preempt a victim of priority <= its
+own, so batch arrivals can never evict interactive work.
+
+**Partial-slot swap.**  With ``partial_swap=True`` a preemption sheds
+only the pages the blocked join actually needs (the victim's coldest,
+oldest-position pages, FlexGen-style) instead of the victim's whole
+allocation; the hot tail stays device-resident and resume reloads just
+the shed prefix — both DMA directions move only the shortfall.
+
+**Swap/decode overlap.**  The generator's ``overlap_swap`` mode makes
+``preempt``/``resume`` submit async DMA; the scheduler's
+``apply_split`` fences at the policy boundary (token identity) before
+budgets retarget.
+
+With default knobs (single priority class, full swap, inline DMA) the
+scheduler reproduces the PR 4/PR 9 engine behaviour exactly — same
+admission order, same victims, same PolicyEvent stream — pinned by
+``tests/test_reqsched.py``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.obs.metrics import NULL_REGISTRY
+from repro.obs.trace import NULL_SPAN, NULL_TRACER
+from repro.serving.generator import (ContinuousGenerator, SlotRef,
+                                     _ParkHandle)
+
+
+def request_priority(key: Any) -> int:
+    """Priority class of a request key (0 when the key carries none).
+
+    Park handles wrap unhashable keys (``Request`` dataclasses), so the
+    lookup unwraps them first.
+    """
+    if isinstance(key, _ParkHandle):
+        key = key.key
+    return int(getattr(key, "priority", 0) or 0)
+
+
+def _rid_of(key: Any) -> Optional[Any]:
+    if isinstance(key, _ParkHandle):
+        key = key.key
+    return getattr(key, "rid", None)
+
+
+class RequestScheduler:
+    """Owns admission, preemption and resume for one continuous engine.
+
+    The engine wires ``capacity`` / ``admit`` into its
+    ``StepPumpWorker`` and calls ``tick`` before every decode step and
+    ``apply_split`` at every policy boundary; everything else is
+    internal policy.  The scheduler holds no locks of its own — every
+    method runs on the single pump thread (or the deterministic
+    ``pump_once`` seam), exactly like the engine methods it replaced.
+    """
+
+    def __init__(self, generator: ContinuousGenerator, context_queue,
+                 *, aging_s: float = 30.0, partial_swap: bool = False,
+                 tracer=None, registry=None):
+        self.gen = generator
+        self.queue = context_queue
+        self.aging_s = max(float(aging_s), 1e-9)
+        self.partial_swap = partial_swap
+        self.tracer = tracer or NULL_TRACER
+        self.registry = registry or NULL_REGISTRY
+        self._seq: Dict[int, int] = {}      # id(req) -> intake order
+        self._enq_t: Dict[int, float] = {}  # id(req) -> first-seen time
+        self._next_seq = 0
+        self._state: Dict[Any, str] = {}    # rid -> lifecycle state
+
+    # ----------------------------------------------------------- lifecycle
+    def _note(self, key: Any, state: str) -> None:
+        rid = _rid_of(key)
+        if rid is not None:
+            self._state[rid] = state
+
+    def note_queued(self, req: Any) -> None:
+        """Engine hook: a request entered the pipeline."""
+        self._note(req, "queued")
+
+    def note_done(self, reqs: List[Any]) -> None:
+        """Engine hook: requests harvested as finished."""
+        for r in reqs:
+            self._note(r, "done")
+
+    def in_flight_rids(self) -> List[Any]:
+        """Rids of every request seen but not yet done (drain errors)."""
+        return sorted((r for r, s in self._state.items() if s != "done"),
+                      key=str)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Point-in-time scheduler state (drain timeouts, debugging)."""
+        gen = self.gen
+        by_state: Dict[str, List[Any]] = {}
+        for rid, st in self._state.items():
+            by_state.setdefault(st, []).append(rid)
+        return {
+            "queued": len(self.queue),
+            "active_slots": getattr(gen, "active_slots", 0),
+            "parked": getattr(gen, "parked_slots", 0),
+            "pending_resume": len(getattr(gen, "_pending_resume", ())),
+            "swap_jobs": (gen.kv.outstanding
+                          if getattr(gen, "kv", None) is not None else 0),
+            "states": {k: sorted(v, key=str)
+                       for k, v in sorted(by_state.items())},
+        }
+
+    # ------------------------------------------------------------ intake
+    def _register(self, req: Any, t: float) -> None:
+        if id(req) not in self._seq:
+            self._seq[id(req)] = self._next_seq
+            self._next_seq += 1
+            self._enq_t[id(req)] = t
+
+    def _effective(self, req: Any, t: float) -> float:
+        """Aged priority: class + waited/aging_s (batch cannot starve)."""
+        waited = max(0.0, t - self._enq_t.get(id(req), t))
+        return request_priority(req) + waited / self.aging_s
+
+    # ----------------------------------------------------------- capacity
+    def capacity(self) -> int:
+        """Joins the pump may pop right now.
+
+        ``admit_capacity`` counts guaranteed admits (free slots AND
+        pages); on a paged generator with host swap room we
+        additionally report one speculative join whenever a victim of
+        no-higher priority than the best waiting request could be
+        preempted for it, so a page-starved (or slot-starved) backlog
+        triggers the swap path instead of waiting for a natural leave.
+        """
+        gen = self.gen
+        cap = gen.admit_capacity
+        if cap != 0 or not getattr(gen, "paged", False):
+            return cap
+        waiting = self.queue.snapshot()
+        if not waiting:
+            return 0
+        limit = max(request_priority(r) for r in waiting)
+        victim = self.select_victim(limit=limit)
+        if victim is not None and gen.kv.can_swap_out(victim.index):
+            return 1
+        return 0
+
+    # ----------------------------------------------------------- admission
+    def admit(self, reqs: List[Any]) -> None:
+        """Prefill arrivals into free KV slots (join at any decode step).
+
+        The popped items plus the rest of the context queue are ranked
+        by aged priority (ties FIFO — with a single priority class this
+        IS arrival order), and the top ``len(reqs)`` dispatch.  A
+        ``None`` join means the pump popped on the speculative swap
+        capacity (or capacity changed asynchronously): preempt victims
+        of no-higher priority until the join fits, and only if no
+        victim can be swapped out return the tail to the FRONT of the
+        context queue so admission order survives backpressure.
+        """
+        gen, q = self.gen, self.queue
+        t = time.perf_counter()
+        backlog = list(reqs) + q.pop_batch(len(q))
+        for r in backlog:
+            self._register(r, t)
+        order = sorted(backlog, key=lambda r: (-self._effective(r, t),
+                                               self._seq[id(r)]))
+        dispatch, rest = order[:len(reqs)], order[len(reqs):]
+        if rest:
+            q.requeue(rest)
+        span = (self.tracer.span("sched.admit", batch=len(dispatch))
+                if self.tracer.enabled and dispatch else NULL_SPAN)
+        with span:
+            for i, r in enumerate(dispatch):
+                with self.tracer.scope(getattr(r, "rid", None)):
+                    ref = gen.join(r, r.prompt, r.max_new_tokens)
+                    while ref is None and self.preempt_for_join(r):
+                        ref = gen.join(r, r.prompt, r.max_new_tokens)
+                if ref is None:
+                    q.requeue(dispatch[i:])
+                    break
+                self._note(r, "running")
+                r.t_gen_start = t
+        if self.registry.enabled:
+            self.registry.gauge("sched.queue_depth").set(
+                float(len(self.queue)))
+            self.registry.gauge("sched.parked").set(
+                float(getattr(gen, "parked_slots", 0)))
+
+    # ---------------------------------------------------------- preemption
+    def select_victim(self, limit: Optional[int] = None
+                      ) -> Optional[SlotRef]:
+        """Swap-victim policy: among live decodable slots of priority
+        <= ``limit``, pick the lowest priority class, then the longest
+        remaining budget (last to finish), then the lowest slot index.
+        With a single priority class this reduces to
+        ``ContinuousGenerator.swap_victim``'s policy exactly."""
+        gen = self.gen
+        best_ref, best_key = None, None
+        pending = getattr(gen, "_pending_resume", ())
+        for ref in gen.table.active_refs():
+            if ref.index in gen._prefilling or ref.index in pending:
+                continue
+            pr = request_priority(gen.table.state(ref).key)
+            if limit is not None and pr > limit:
+                continue
+            k = (pr, -gen.table.state(ref).remaining, ref.index)
+            if best_key is None or k < best_key:
+                best_ref, best_key = ref, k
+        return best_ref
+
+    def _shed_pages(self, victim: SlotRef, joiner: Any) -> Optional[int]:
+        """Pages the victim must shed for ``joiner`` to fit (partial
+        swap): the join's worst-case need minus what freeing the slot
+        already supplies (spares + the victim's unspent reservation),
+        clamped to [1, held].  ``None`` = shed everything (full swap
+        covers it no cheaper)."""
+        gen = self.gen
+        g = gen.gen_cfg
+        req = getattr(joiner, "max_new_tokens", None)
+        budget = max(1, min(req if req is not None else g.max_new_tokens,
+                            g.max_new_tokens))
+        pool = gen.kv.pool
+        need = pool.blocks_for(g.ctx_len + budget)
+        held = len(pool.table(victim.index))
+        short = (need - pool.available_pages
+                 - pool.reservation(victim.index))
+        if short >= held:
+            return None
+        return max(short, 1)
+
+    def preempt_for_join(self, joiner: Any) -> bool:
+        """Swap-aware backpressure relief: park the lowest-priority live
+        slot (longest remaining budget) so a blocked join can take its
+        pages — and its slot.  Victims are limited to the joiner's own
+        priority class or below, so batch work never evicts interactive
+        work.  Returns True when a victim was swapped out; False falls
+        back to pure backpressure (requeue)."""
+        gen = self.gen
+        if not getattr(gen, "paged", False):
+            return False
+        victim = self.select_victim(limit=request_priority(joiner))
+        if victim is None:
+            return False
+        pages = self._shed_pages(victim, joiner) if self.partial_swap \
+            else None
+        key = gen.table.state(victim).key
+        span = (self.tracer.span("sched.preempt", slot=victim.index,
+                                 pages=(pages if pages is not None
+                                        else len(gen.kv.pool.table(
+                                            victim.index))))
+                if self.tracer.enabled else NULL_SPAN)
+        with span:
+            handle = gen.preempt(victim, pages=pages)
+        if handle is None:
+            return False
+        self._note(key, "parked_partial" if pages is not None
+                   else "parked")
+        return True
+
+    # -------------------------------------------------------------- resume
+    def tick(self) -> None:
+        """Swap parked requests back in — highest priority class first,
+        FIFO within a class (with one class this IS preemption order).
+        Backlogged joins of the same-or-higher class strictly precede
+        resumes so swap never thrashes against admission; a parked
+        request of strictly higher class than everything still waiting
+        resumes ahead of the backlog (interactive work never queues
+        behind batch arrivals).  With a single priority class this is
+        exactly the old rule: resume only once the queue is empty."""
+        gen = self.gen
+        if not getattr(gen, "parked_slots", 0):
+            return
+        order = sorted(enumerate(gen.parked_keys()),
+                       key=lambda kv: (-request_priority(kv[1]), kv[0]))
+        waiting = self.queue.snapshot()
+        if waiting:
+            best_wait = max(request_priority(r) for r in waiting)
+            order = [kv for kv in order
+                     if request_priority(kv[1]) > best_wait]
+        for _, key in order:
+            if gen.resume(key) is None:
+                break               # slots/pages exhausted: retry later
+            self._note(key, "running")
+
+    # ------------------------------------------------------ policy boundary
+    def apply_split(self, num_slots: int, split=None) -> Dict[str, int]:
+        """Retarget the generator from the market's clearing: fence any
+        outstanding swap DMA (token identity across the boundary), then
+        apply slot count and — for paged generators — the device /
+        host / prefix page budgets."""
+        gen = self.gen
+        if hasattr(gen, "fence"):
+            gen.fence()
+        pages = host_pages = prefix_pages = None
+        if split is not None and getattr(gen, "paged", False):
+            pages = split.kv_page_budget
+            host_pages = split.host_page_budget
+            if getattr(gen, "prefix", None) is not None:
+                prefix_pages = split.prefix_page_budget
+        return gen.retarget(num_slots=num_slots, page_budget=pages,
+                            host_page_budget=host_pages,
+                            prefix_page_budget=prefix_pages)
+
+    def priority_pressure(self) -> float:
+        """Fraction of waiting + in-flight work that is interactive
+        (priority > 0) — the market's priority-weighted clearing signal:
+        under interactive pressure the placement buys more decode
+        throughput (KV pages) relative to retrieval residency."""
+        n = hot = 0
+        for r in self.queue.snapshot():
+            n += 1
+            hot += request_priority(r) > 0
+        gen = self.gen
+        for ref in gen.table.active_refs():
+            n += 1
+            hot += request_priority(gen.table.state(ref).key) > 0
+        for key in (gen.parked_keys() if getattr(gen, "paged", False)
+                    else ()):
+            n += 1
+            hot += request_priority(key) > 0
+        return hot / n if n else 0.0

@@ -25,6 +25,11 @@ class Request:
     arrival: float
     top_k: int = 5
     max_new_tokens: int = 32
+    # scheduling class: higher outranks lower (1 = interactive,
+    # 0 = batch).  Consumed by the request scheduler for admission
+    # order, swap-victim selection and resume order; an aging rule
+    # promotes long-waiting batch requests so they cannot starve.
+    priority: int = 0
 
     retrieved: Optional[List[str]] = None
     prompt: Optional[str] = None

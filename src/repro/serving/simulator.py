@@ -95,6 +95,21 @@ class SimConfig:
     # of waiting for a natural leave; parked slots resume FIFO once the
     # join backlog clears
     swap: bool = False
+    # priority classes (continuous mode): fraction of arrivals tagged
+    # interactive (priority 1).  Interactive requests join first, are
+    # never preempted for a batch joiner, and resume first — the request
+    # scheduler's policy, mirrored at simulation scale.  0 = single class
+    # (identical to the pre-priority behaviour).
+    priority_mix: float = 0.0
+    # partial-slot swap (swap mode): a preemption sheds only the pages
+    # the blocked join is short of (the victim's coldest prefix,
+    # FlexGen-style) instead of its whole allocation — both DMA
+    # directions move only the shortfall
+    partial_swap: bool = False
+    # swap/decode overlap: the swap DMA rides an async transfer worker,
+    # so only the copy time not hidden behind the step's decode+prefill
+    # compute stalls the pipeline (CostModel.kv_swap_time(overlap=True))
+    overlap_swap: bool = False
     # sharded IVF retrieval: probed partitions split across S hosts
     # (per-shard disk/CPU in parallel + one (Q, k) all-gather — see
     # CostModel.retrieval_time); None defers to the cost model's own
@@ -234,6 +249,12 @@ class ServingSimulator:
         s = self.sim
         reqs = [Request(rid=i, query=f"q{i}", arrival=t)
                 for i, t in enumerate(arrivals)]
+        if s.priority_mix > 0:
+            # deterministic interleave at the configured mix: every
+            # ``round(1/mix)``-th arrival is interactive
+            stride = max(1, round(1.0 / s.priority_mix))
+            for i, r in enumerate(reqs):
+                r.priority = 1 if i % stride == 0 else 0
         if s.mode.startswith("serial") or s.mode == "no_pipeline":
             return self._run_serial(reqs)
         if self.continuous:
@@ -390,30 +411,57 @@ class ServingSimulator:
                 # only the non-shared pages need reserving
                 c = cached if cap["seeded"] else 0
                 need = hit_pages if c else req_pages
+                # priority admission: the best waiting request joins
+                # first (highest class, FIFO within a class); with a
+                # single class this is plain FIFO
+                ji = (min(range(len(ctx_q)),
+                          key=lambda j: (-ctx_q[j].priority, j))
+                      if s.priority_mix > 0 else 0)
+                jpr = ctx_q[ji].priority
                 if s.paged and cap["reserved"] + need > cap["pages"]:
-                    if (s.swap and active
-                            and sum(sl[2] for sl in swapped) + req_pages
-                            <= cap["host"]):
-                        victim = max(active, key=lambda sl: sl[1])
-                        active.remove(victim)     # pages move host-side
-                        swapped.append(victim)
-                        cap["reserved"] -= victim[2]
-                        swap_pages += victim[2]
-                        continue
+                    if s.swap and active:
+                        # victim: lowest priority class (never above the
+                        # joiner's own), then longest remaining budget
+                        cands = [sl for sl in active
+                                 if sl[0].priority <= jpr]
+                        victim = max(
+                            cands,
+                            key=lambda sl: (-sl[0].priority, sl[1])
+                        ) if cands else None
+                        if victim is not None:
+                            # partial swap sheds only the shortfall (the
+                            # victim's coldest prefix); the hot tail
+                            # stays booked device-side
+                            short = cap["reserved"] + need - cap["pages"]
+                            shed = (max(1, min(victim[2], short))
+                                    if s.partial_swap else victim[2])
+                            host_used = sum(sh for _, sh in swapped)
+                            if host_used + shed <= cap["host"]:
+                                active.remove(victim)  # pages host-side
+                                swapped.append((victim, shed))
+                                cap["reserved"] -= shed
+                                swap_pages += shed
+                                continue
                     break                 # page exhaustion: backpressure
-                r = ctx_q.pop(0)
+                r = ctx_q.pop(ji)
                 r.t_gen_start = t
                 joiners.append((r, c))
                 active.append([r, s.out_len, need if s.paged else 0, c])
                 if s.paged:
                     cap["reserved"] += need
-            # parked slots swap back in FIFO once the join backlog clears
-            while (swapped and not ctx_q and len(active) < cap["b"]
-                   and cap["reserved"] + swapped[0][2] <= cap["pages"]):
-                slot = swapped.pop(0)
+            # parked slots swap back in once the join backlog clears —
+            # highest priority class first, FIFO within a class (one
+            # class = plain FIFO over preemption order)
+            while swapped and not ctx_q and len(active) < cap["b"]:
+                ri = (min(range(len(swapped)),
+                          key=lambda j: (-swapped[j][0][0].priority, j))
+                      if s.priority_mix > 0 else 0)
+                if cap["reserved"] + swapped[ri][1] > cap["pages"]:
+                    break
+                slot, shed = swapped.pop(ri)
                 active.append(slot)
-                cap["reserved"] += slot[2]
-                swap_pages += slot[2]
+                cap["reserved"] += shed
+                swap_pages += shed
             if not active:
                 gen_running = False
                 return
@@ -460,9 +508,13 @@ class ServingSimulator:
                     cap["seeded"] = True
                     if s.paged:
                         cap["reserved"] += shared_pages
-            if swap_pages:  # whole-page DMA over PCIe rides it too
+            if swap_pages:  # whole-page DMA over PCIe rides it too:
+                # inline it stalls the whole copy; with overlap only the
+                # tail not hidden behind this step's compute stalls
                 dur += self.cost.kv_swap_time(swap_pages, s.page_size,
-                                              kv_format=s.kv_format)
+                                              kv_format=s.kv_format,
+                                              overlap=s.overlap_swap,
+                                              hidden_s=dur)
             gpu_busy += dur
             for slot in active:          # one token per live slot
                 slot[1] -= 1

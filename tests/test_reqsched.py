@@ -1,0 +1,427 @@
+"""RequestScheduler: extraction equivalence + the three swap follow-ons.
+
+Contracts pinned here:
+
+1. **Equivalence.** With default knobs (single priority class, full
+   swap, inline DMA) the extracted scheduler reproduces the old
+   engine-private policy exactly: FIFO admission order, the same swap
+   victims as ``ContinuousGenerator.swap_victim``, and token-identical
+   outputs vs the uninterrupted whole-batch reference.
+2. **Priority classes.** Interactive (``priority=1``) outranks batch
+   (0) for admission and resume; batch joiners can never evict
+   interactive slots; the aging rule promotes long-waiting batch work.
+3. **Partial-slot swap.** ``partial_swap=True`` sheds only a victim's
+   coldest pages and stays token-identical.
+4. **Swap/decode overlap.** Async swap DMA stays token-identical, and
+   ``apply_split`` fences every outstanding job (the policy-boundary
+   token-identity guarantee).
+
+The hypothesis property suite for the in-flight page bookkeeping lives
+in ``tests/test_reqsched_pool.py``; this module is hypothesis-free so
+it always runs in the CI fast tier.
+"""
+import time
+
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.pipeline import StageQueue
+from repro.models.model import Model
+from repro.serving.generator import (ContinuousGenerator, Generator,
+                                     GeneratorConfig)
+from repro.serving.reqsched import RequestScheduler, request_priority
+from repro.serving.request import Request
+
+CTX, MAX_NEW = 16, 5
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    params = Model(cfg, remat=False).init(jax.random.PRNGKey(0),
+                                          jnp.float32)
+    return cfg, params
+
+
+def _requests(prompts, priorities=None):
+    out = []
+    for i, p in enumerate(prompts):
+        r = Request(rid=i, query=p, arrival=time.perf_counter(),
+                    max_new_tokens=MAX_NEW,
+                    priority=(priorities[i] if priorities else 0))
+        r.prompt = p
+        out.append(r)
+    return out
+
+
+def _prompts(n=6):
+    return [f"query {i} topic{i % 3} alpha beta" for i in range(n)]
+
+
+def _drive(gen, sched, queue, reqs, boundary_every=None, guard=2000):
+    """Deterministic pump mirroring ``RagdollEngine.pump_once``:
+    capacity probe -> admit -> tick -> step -> harvest, with an
+    optional ``apply_split`` policy boundary every few ticks."""
+    queue.put_many(reqs)
+    for r in reqs:
+        sched.note_queued(r)
+    done = {}
+    tick = 0
+    while len(done) < len(reqs):
+        cap = sched.capacity()
+        items = queue.pop_batch(cap) if cap > 0 else []
+        if items:
+            sched.admit(items)
+        sched.tick()
+        gen.step()
+        for key, text, _ in gen.harvest():
+            done[key.rid] = text
+            sched.note_done([key])
+        if boundary_every and tick % boundary_every == 0:
+            sched.apply_split(gen.num_slots)
+        tick += 1
+        assert tick < guard, "scheduler driver stalled"
+    return [done[i] for i in range(len(reqs))]
+
+
+# ------------------------------------------------------- fake-gen ordering
+class _FakeGen:
+    """Just enough generator surface for admission-order tests."""
+    paged = False
+    parked_slots = 0
+
+    def __init__(self, capacity=1):
+        self.admit_capacity = capacity
+        self.joined = []
+
+    def join(self, req, prompt, max_new_tokens=None):
+        self.joined.append(req)
+        return object()          # a non-None "ref"
+
+
+def test_default_knobs_admission_is_fifo():
+    """Single priority class: admission order IS arrival order, across
+    capacity-limited admit calls and requeues (the PR 4 behaviour)."""
+    gen, q = _FakeGen(capacity=2), StageQueue("ctx")
+    sched = RequestScheduler(gen, q)
+    reqs = _requests(_prompts(6))
+    q.put_many(reqs)
+    while len(gen.joined) < len(reqs):
+        items = q.pop_batch(2)
+        sched.admit(items)
+    assert [r.rid for r in gen.joined] == [0, 1, 2, 3, 4, 5]
+
+
+def test_priority_admission_order():
+    """Interactive requests dispatch ahead of earlier-arrived batch
+    work; FIFO within a class."""
+    gen, q = _FakeGen(capacity=2), StageQueue("ctx")
+    sched = RequestScheduler(gen, q)
+    reqs = _requests(_prompts(5), priorities=[0, 0, 1, 0, 1])
+    q.put_many(reqs)
+    while len(gen.joined) < len(reqs):
+        sched.admit(q.pop_batch(2))
+    assert [r.rid for r in gen.joined] == [2, 4, 0, 1, 3]
+
+
+def test_aging_promotes_waiting_batch_request():
+    """With a tiny ``aging_s`` a batch request that has waited outranks
+    a fresh interactive arrival; with the default it does not."""
+    for aging_s, first in ((1e-9, 0), (30.0, 1)):
+        gen, q = _FakeGen(capacity=1), StageQueue("ctx")
+        sched = RequestScheduler(gen, q, aging_s=aging_s)
+        batch, inter = _requests(_prompts(2), priorities=[0, 1])
+        q.put(batch)
+        sched.admit([])               # registers the batch arrival time
+        time.sleep(0.002)
+        q.put(inter)
+        sched.admit(q.pop_batch(1))
+        assert gen.joined[0].rid == first, aging_s
+
+
+# ------------------------------------------------------------- equivalence
+def test_select_victim_matches_generator_policy(tiny_model):
+    """At a single priority class the scheduler's victim is exactly
+    ``ContinuousGenerator.swap_victim``'s, at every step of a live
+    preemption-heavy trace."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    worst = -(-(CTX + MAX_NEW) // 4)
+    gen = ContinuousGenerator(cfg, params, g, num_slots=3, streamed=False,
+                              paged=True, page_size=4,
+                              page_budget=2 * worst)
+    q = StageQueue("ctx")
+    sched = RequestScheduler(gen, q)
+    reqs = _requests(_prompts(6))
+    q.put_many(reqs)
+    checked = 0
+    for _ in range(300):
+        a, b = sched.select_victim(), gen.swap_victim()
+        assert (a is None) == (b is None)
+        if a is not None:
+            assert a.index == b.index
+            checked += 1
+        cap = sched.capacity()
+        if cap:
+            sched.admit(q.pop_batch(cap))
+        sched.tick()
+        gen.step()
+        gen.harvest()
+        if not (len(q) or gen.active_slots or gen.parked_slots):
+            break
+    assert checked > 0
+
+
+@pytest.mark.parametrize("partial,overlap", [(False, False), (True, False),
+                                             (False, True), (True, True)])
+def test_sched_preemption_token_identical(tiny_model, partial, overlap):
+    """Scheduler-driven preempt->resume cycles — full and partial swap,
+    inline and async DMA — never change greedy outputs vs the
+    uninterrupted whole-batch reference (Model path)."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _prompts(6)
+    dense = Generator(cfg, params, g, streamed=False).generate(prompts)
+    worst = -(-(CTX + MAX_NEW) // 4)
+    gen = ContinuousGenerator(cfg, params, g, num_slots=3, streamed=False,
+                              paged=True, page_size=4,
+                              page_budget=2 * worst + 2,
+                              overlap_swap=overlap)
+    q = StageQueue("ctx")
+    sched = RequestScheduler(gen, q, partial_swap=partial)
+    shed = []
+    orig_preempt = gen.preempt
+
+    def recording_preempt(ref, pages=None):
+        shed.append(pages)
+        return orig_preempt(ref, pages=pages)
+
+    gen.preempt = recording_preempt
+    try:
+        out = _drive(gen, sched, q, _requests(prompts), boundary_every=4)
+    finally:
+        if overlap:
+            gen.kv.close()
+    assert out == dense
+    assert shed, "no preemption cycle actually happened"
+    if partial:
+        assert any(p is not None for p in shed), shed
+    else:
+        assert all(p is None for p in shed), shed
+    # every lease, device page, host page and DMA job accounted for
+    assert gen.free_slots == gen.num_slots
+    assert gen.kv.pool.used_pages == 0
+    assert gen.kv.pool.inflight_pages == 0
+    assert gen.kv.host.used_pages == 0
+    if overlap:
+        assert gen.kv.outstanding == 0
+
+
+@pytest.mark.slow
+def test_sched_preemption_token_identical_streamed(tiny_model):
+    """Same contract through the offloading StreamedExecutor path with
+    partial swap AND async overlap enabled together."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    prompts = _prompts(6)
+    dense = Generator(cfg, params, g, streamed=True).generate(prompts)
+    worst = -(-(CTX + MAX_NEW) // 4)
+    gen = ContinuousGenerator(cfg, params, g, num_slots=3, streamed=True,
+                              paged=True, page_size=4,
+                              page_budget=2 * worst + 2,
+                              overlap_swap=True)
+    q = StageQueue("ctx")
+    sched = RequestScheduler(gen, q, partial_swap=True)
+    try:
+        out = _drive(gen, sched, q, _requests(prompts), boundary_every=4)
+    finally:
+        gen.kv.close()
+    assert out == dense
+    assert gen.kv.outstanding == 0
+    assert gen.kv.pool.used_pages == 0 and gen.kv.host.used_pages == 0
+
+
+def test_apply_split_fences_outstanding_swaps(tiny_model):
+    """The policy boundary may never observe a half-applied async swap:
+    ``apply_split`` drains the DMA queue before retargeting."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    gen = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                              paged=True, page_size=4,
+                              page_budget=-(-(CTX + MAX_NEW) // 4),
+                              overlap_swap=True)
+    q = StageQueue("ctx")
+    sched = RequestScheduler(gen, q)
+    first, joiner = _requests(_prompts(2))
+    try:
+        assert gen.join(first, first.prompt, MAX_NEW) is not None
+        assert sched.preempt_for_join(joiner)      # async D2H submitted
+        assert gen.kv.outstanding >= 1
+        sched.apply_split(gen.num_slots)           # fences
+        assert gen.kv.outstanding == 0
+        assert gen.join(joiner, joiner.prompt, MAX_NEW) is not None
+        done = {}
+        for _ in range(200):
+            sched.tick()
+            gen.step()
+            for key, text, _ in gen.harvest():
+                done[key.rid] = text
+            if len(done) == 2 and not gen.parked_slots:
+                break
+        assert set(done) == {first.rid, joiner.rid}
+    finally:
+        gen.kv.close()
+
+
+def test_batch_never_evicts_interactive(tiny_model):
+    """Victim selection is capped at the joiner's priority class: a
+    batch joiner finds no victim among interactive slots, an
+    interactive joiner does."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    gen = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                              paged=True, page_size=4,
+                              page_budget=-(-(CTX + MAX_NEW) // 4))
+    q = StageQueue("ctx")
+    sched = RequestScheduler(gen, q)
+    inter, batch, inter2 = _requests(_prompts(3), priorities=[1, 0, 1])
+    assert gen.join(inter, inter.prompt, MAX_NEW) is not None
+    assert sched.select_victim(limit=0) is None
+    assert not sched.preempt_for_join(batch)       # batch cannot evict
+    assert gen.active_slots == 1                   # slot untouched
+    victim = sched.select_victim(limit=1)
+    assert victim is not None
+    assert request_priority(gen.table.state(victim).key) == 1
+    assert sched.preempt_for_join(inter2)          # same class may
+    assert gen.parked_slots == 1
+
+
+def test_interactive_resumes_ahead_of_batch_backlog(tiny_model):
+    """A parked interactive request resumes before lower-priority
+    queued arrivals are admitted (it never queues behind batch); with
+    a single class the old rule — resume only when the queue is empty
+    — is preserved."""
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=MAX_NEW)
+    gen = ContinuousGenerator(cfg, params, g, num_slots=2, streamed=False,
+                              paged=True, page_size=4)
+    q = StageQueue("ctx")
+    sched = RequestScheduler(gen, q)
+    inter, batch, batch2 = _requests(_prompts(3), priorities=[1, 0, 0])
+    assert gen.join(inter, inter.prompt, MAX_NEW) is not None
+    assert gen.preempt(sched.select_victim()) is not None
+    q.put(batch)                       # batch backlog is waiting
+    sched.tick()
+    assert gen.parked_slots == 0       # interactive resumed anyway
+    while gen.active_slots:            # drain the interactive slot
+        gen.step()
+    gen.harvest()
+    # single class: a parked batch request stays parked while a
+    # same-class backlog waits (the old queue-empty rule)
+    assert gen.join(batch2, batch2.prompt, MAX_NEW) is not None
+    assert gen.preempt(sched.select_victim(limit=0)) is not None
+    sched.tick()
+    assert gen.parked_slots == 1
+    q.pop_batch(1)                     # backlog clears
+    sched.tick()
+    assert gen.parked_slots == 0
+
+
+# ------------------------------------------------------ engine integration
+def test_engine_lifecycle_and_policy_trace(tiny_model):
+    """Threaded engine run with default knobs: every request completes,
+    the policy boundary journals PolicyEvents, and the scheduler's
+    lifecycle bookkeeping drains to all-done."""
+    import tempfile
+
+    from repro.core.costmodel import GB, PF_HIGH, CostModel, ModelProfile
+    from repro.core.placement import PlacementOptimizer
+    from repro.core.scheduler import BacklogScheduler
+    from repro.retrieval import HashEmbedder, VectorStore
+    from repro.serving.engine import RagdollEngine
+
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=4)
+    mp = ModelProfile.from_config(get_config("llama3-8b"))
+    cm = CostModel(PF_HIGH, mp, partition_bytes=8 * GB, num_partitions=8)
+    opt = PlacementOptimizer(cm, 512, 32, kv_page_size=4)
+    emb = HashEmbedder(dim=16)
+    texts = [f"doc {i}" for i in range(40)]
+    with tempfile.TemporaryDirectory() as root:
+        store = VectorStore.build(texts, emb, num_partitions=4, root=root)
+        gen = ContinuousGenerator(cfg, params, g, num_slots=3,
+                                  streamed=False, paged=True, page_size=4)
+        eng = RagdollEngine(store, emb, gen, BacklogScheduler(max_batch=8),
+                            BacklogScheduler(max_batch=3), optimizer=opt,
+                            policy_every=2)
+        eng.start()
+        try:
+            n = 5
+            for i in range(n):
+                eng.submit(Request(rid=i, query=f"query {i}",
+                                   arrival=time.perf_counter()))
+            done = eng.drain(n, timeout=120)
+        finally:
+            eng.stop()
+        assert len(done) == n and all(r.done and r.output for r in done)
+        assert eng.policy_trace, "no PolicyEvent journaled"
+        assert eng.scheduler.in_flight_rids() == []
+        snap = eng.scheduler.snapshot()
+        assert sorted(snap["states"].get("done", [])) == list(range(n))
+        assert snap["queued"] == 0 and snap["parked"] == 0
+
+
+def test_engine_drain_timeout_is_descriptive(tiny_model):
+    """An unstarted engine's drain must raise a TimeoutError naming the
+    in-flight rids and the scheduler snapshot — never silently return
+    fewer requests."""
+    import tempfile
+
+    from repro.core.scheduler import BacklogScheduler
+    from repro.retrieval import HashEmbedder, VectorStore
+    from repro.serving.engine import RagdollEngine
+
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=4)
+    emb = HashEmbedder(dim=16)
+    texts = [f"doc {i}" for i in range(20)]
+    with tempfile.TemporaryDirectory() as root:
+        store = VectorStore.build(texts, emb, num_partitions=2, root=root)
+        gen = ContinuousGenerator(cfg, params, g, num_slots=2,
+                                  streamed=False, paged=True, page_size=4)
+        eng = RagdollEngine(store, emb, gen, BacklogScheduler(max_batch=4),
+                            BacklogScheduler(max_batch=2))
+        try:
+            eng.submit(Request(rid=7, query="q", arrival=0.0))
+            with pytest.raises(TimeoutError) as ei:
+                eng.drain(1, timeout=0.1)
+            msg = str(ei.value)
+            assert "drain(1)" in msg and "7" in msg
+            assert "scheduler=" in msg and "queued" in msg
+        finally:
+            eng.streamer.close()
+
+
+def test_serial_engine_drain_timeout_is_descriptive(tiny_model):
+    """SerialRAGEngine.drain times out descriptively too, naming the
+    still-queued rids."""
+    import tempfile
+
+    from repro.retrieval import HashEmbedder, VectorStore
+    from repro.serving.engine import SerialRAGEngine
+
+    cfg, params = tiny_model
+    g = GeneratorConfig(ctx_len=CTX, max_new_tokens=4)
+    emb = HashEmbedder(dim=16)
+    texts = [f"doc {i}" for i in range(20)]
+    with tempfile.TemporaryDirectory() as root:
+        store = VectorStore.build(texts, emb, num_partitions=2, root=root)
+        eng = SerialRAGEngine(store, emb,
+                              Generator(cfg, params, g, streamed=False))
+        # never started: the queued request cannot complete
+        eng.submit(Request(rid=3, query="q", arrival=0.0))
+        with pytest.raises(TimeoutError) as ei:
+            eng.drain(1, timeout=0.1)
+        assert "drain(1)" in str(ei.value) and "3" in str(ei.value)

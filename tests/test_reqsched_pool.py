@@ -1,0 +1,142 @@
+"""Property tests for the in-flight page state (async swap bookkeeping).
+
+Arbitrary interleavings of admit / ensure / release / partial park
+(inline and in-flight) / complete_inflight / unpark / standalone holds
+/ resize must keep the :class:`PagePool` conservation law
+
+    free + referenced + in-flight == capacity
+
+with the three sets pairwise disjoint — in particular the free list
+never intersects the referenced or in-flight sets, so a page pinned by
+an outstanding async D2H can never be re-leased before the DMA lands,
+and no schedule leaks a page.
+
+Pure bookkeeping (no JAX, no page data), so the suite runs in the CI
+fast tier under the bounded deterministic hypothesis profile
+(see tests/conftest.py).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")   # pinned in requirements.txt; skip, never collection-error
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kvpool import PageExhausted, PagePool, TRASH_PAGE
+
+OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "ensure", "release", "park",
+                               "complete", "unpark", "hold", "drop_hold",
+                               "resize"]),
+              st.integers(min_value=0, max_value=9),
+              st.integers(min_value=0, max_value=40)),
+    max_size=100)
+
+
+def _invariants(pool: PagePool, parked, holds):
+    cap = pool.capacity
+    free = set(pool._free)
+    referenced = {p for p in range(1, cap + 1) if pool.refcount(p) > 0}
+    inflight = {p for p in range(1, cap + 1) if pool.is_inflight(p)}
+    # conservation: the three states partition the id space exactly
+    assert len(free) + len(referenced) + len(inflight) == cap
+    assert not free & (referenced | inflight)
+    assert not referenced & inflight
+    assert pool.free_pages == len(free)
+    assert pool.referenced_pages == len(referenced)
+    assert pool.inflight_pages == len(inflight)
+    # every lease is unique and never the trash page
+    leased = [p for k in pool.holders() for p in pool.table(k)]
+    assert len(leased) == len(set(leased))
+    assert TRASH_PAGE not in leased
+    # parked tails retain exactly their device-resident pages; shed
+    # pages stay pinned in-flight until the DMA lands
+    for k, st_ in parked.items():
+        if ("tail", k) in pool.holders():
+            assert len(pool.table(("tail", k))) == st_["tail"]
+        else:
+            assert st_["tail"] == 0
+        for p in st_["inflight"]:
+            assert pool.is_inflight(p)
+    for p in holds:
+        assert pool.refcount(p) >= 1
+    assert pool.reserved_pages <= pool.free_pages
+
+
+@given(cap=st.integers(min_value=1, max_value=14),
+       page=st.integers(min_value=1, max_value=8), ops=OPS)
+@settings(max_examples=120)
+def test_inflight_interleavings_never_leak_or_double_lease(cap, page, ops):
+    pool = PagePool(cap, page)
+    lengths = {}   # live slot -> ensured length
+    parked = {}    # parked slot -> {tail, blocks, inflight pages}
+    holds = []     # standalone incref'd pages (shared-page modelling)
+    nxt = 0
+    for op, pick, amount in ops:
+        if op == "admit":
+            if pool.admit(nxt, amount):
+                lengths[nxt] = min(amount, page)
+                pool.ensure(nxt, lengths[nxt])
+            nxt += 1
+        elif op == "ensure" and lengths:
+            k = sorted(lengths)[pick % len(lengths)]
+            want = lengths[k] + amount
+            try:
+                pool.ensure(k, want)
+                lengths[k] = max(lengths[k], want)
+            except PageExhausted:
+                pass                              # state unchanged
+        elif op == "release" and lengths:
+            k = sorted(lengths)[pick % len(lengths)]
+            pool.release(k)
+            del lengths[k]
+        elif op == "park" and lengths:
+            k = sorted(lengths)[pick % len(lengths)]
+            tab = pool.table(k)
+            blocks = amount % (len(tab) + 1)      # partial park allowed
+            inflight = bool(pick % 2)
+            cold, _ = pool.park(k, ("tail", k), blocks=blocks,
+                                inflight=inflight)
+            assert cold == tab[:blocks]           # coldest = oldest
+            parked[k] = {"tail": len(tab) - blocks, "blocks": blocks,
+                         "inflight": list(cold) if inflight else []}
+            del lengths[k]
+        elif op == "complete" and parked:
+            k = sorted(parked)[pick % len(parked)]
+            shed = parked[k]["inflight"]
+            if shed:
+                pool.complete_inflight(shed)
+                for p in shed:                    # double-land must raise
+                    with pytest.raises(ValueError):
+                        pool.complete_inflight([p])
+                parked[k]["inflight"] = []
+        elif op == "unpark" and parked:
+            k = sorted(parked)[pick % len(parked)]
+            if parked[k]["inflight"]:
+                continue                          # DMA must land first
+            blocks, tail = parked[k]["blocks"], parked[k]["tail"]
+            new = pool.unpark(("tail", k), k, blocks)
+            if new is not None:
+                assert len(new) == blocks
+                assert len(pool.table(k)) == blocks + tail
+                del parked[k]
+                lengths[k] = (blocks + tail) * page
+        elif op == "hold":
+            got = pool.grab(1)
+            if got is not None:
+                holds.extend(got)
+        elif op == "drop_hold" and holds:
+            pool.decref(holds.pop(pick % len(holds)))
+        elif op == "resize":
+            pool.resize(max(amount, 1))
+        _invariants(pool, parked, holds)
+    # drain everything: the pool must return to fully free
+    for k in list(lengths):
+        pool.release(k)
+    for k, st_ in list(parked.items()):
+        if st_["inflight"]:
+            pool.complete_inflight(st_["inflight"])
+        if ("tail", k) in pool.holders():
+            pool.release(("tail", k))
+    for p in holds:
+        pool.decref(p)
+    assert pool.used_pages == 0 and pool.inflight_pages == 0
+    assert pool.free_pages == pool.capacity
